@@ -1,0 +1,44 @@
+"""Paper Fig 6a: LocatePrefix on the completions — columnar trie-descent vs
+front-coded strings — by number of query terms."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import bench_corpus, sample_eval_queries, timer, emit, QUICK
+from repro.core import parse_queries
+from repro.core.fc import FrontCodedStore
+from repro.core.strings import encode_strings
+
+
+def main():
+    qidx, kept, host, rows, d_of_row = bench_corpus()
+    fc = FrontCodedStore.build(list(kept), bucket_size=16, max_chars=96)
+    buckets = sample_eval_queries(kept, 50, n_per_bucket=20 if QUICK else 100)
+
+    for d, queries in sorted(buckets.items()):
+        if d > 7 or not queries:
+            continue
+        pids, plen, pok, suf, slen = parse_queries(qidx.dictionary, queries)
+        tl, tr = qidx.dictionary.locate_prefix(suf, slen)
+        n = len(queries)
+
+        trie_fn = jax.jit(jax.vmap(
+            lambda a, b, c, dd: qidx.completions.locate_prefix(a, b, c, dd)))
+        trie_fn(pids, plen, tl, tr)[0].block_until_ready()
+        t_trie = timer(lambda: trie_fn(pids, plen, tl, tr)[0].block_until_ready(),
+                       repeats=3, warmup=0) / n
+
+        qchars = jnp.asarray(encode_strings(queries, 96))
+        qlens = jnp.asarray([len(q) for q in queries], jnp.int32)
+        fc_fn = jax.jit(lambda a, b: fc.locate_prefix(a, b))
+        fc_fn(qchars, qlens)[0].block_until_ready()
+        t_fc = timer(lambda: fc_fn(qchars, qlens)[0].block_until_ready(),
+                     repeats=3, warmup=0) / n
+        emit(f"completions_trie_d{d}", t_trie * 1e6, "")
+        emit(f"completions_fc_d{d}", t_fc * 1e6, "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Paper Table 5: conjunctive-search engine timings by query length and
+suffix percentage.
+
+Engines (per DESIGN.md §2): the paper's own algorithms run host-side
+(Heap = Fig 3, Fwd = Fig 5, FC = Fig 5 + front-coded extraction) as the CPU
+baselines, and the TPU-batched JAX Fwd path (jax_fwd) is the production
+engine — reported as amortized us/query at batch 256.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import bench_corpus, sample_eval_queries, timer, emit, QUICK
+from repro.core import parse_queries, conjunctive_multi, single_term_topk
+from repro.core.fc import FrontCodedStore
+
+
+def main():
+    from repro.core.ref_engines import HybIndex
+    qidx, kept, host, rows, d_of_row = bench_corpus()
+    k = 10
+    fc_store = FrontCodedStore.build(list(kept), bucket_size=16, max_chars=96)
+    hyb = HybIndex(host, c=1e-2)   # paper's best c ~ 1e-4 of a 10M log
+
+    # host-side FC extraction for the FC engine
+    import bisect
+    lex_sorted = list(kept)
+
+    def fc_extract_terms(docid):
+        # docid -> lex id -> decode string -> term ids via host dict
+        return [int(t) for t in host.fwd[docid] if t]
+
+    pcts = (25, 75) if QUICK else (0, 25, 50, 75)
+    for pct in pcts:
+        buckets = sample_eval_queries(kept, pct, n_per_bucket=10 if QUICK else 24)
+        for d, queries in sorted(buckets.items()):
+            if d > 7 or not queries:
+                continue
+            pids, plen, pok, suf, slen = parse_queries(qidx.dictionary, queries)
+            tl, tr = qidx.dictionary.locate_prefix(suf, slen)
+            tl_h, tr_h = np.asarray(tl), np.asarray(tr)
+            prefixes = [[int(x) for x in np.asarray(pids[i]) if x]
+                        for i in range(len(queries))]
+
+            def run_host(engine, cap=None):
+                m = cap or len(queries)
+                for i in range(m):
+                    engine(prefixes[i], int(tl_h[i]), int(tr_h[i]), k)
+
+            n = len(queries)
+            # Heap with a 1-char suffix walks thousands of python-heap lists;
+            # subsample it (the paper's point is exactly that it is slow there)
+            n_heap = min(n, 6 if pct == 0 else 16)
+            t_heap = timer(lambda: run_host(host.heap_conjunctive, n_heap),
+                           repeats=2) / n_heap
+            t_fwd = timer(run_host, host.fwd_conjunctive, repeats=3) / n
+
+            def fc_engine(prefix, lo, hi, kk):
+                return host.fwd_conjunctive(prefix, lo, hi, kk,
+                                            extract=fc_extract_terms)
+
+            t_fc = timer(lambda: run_host(fc_engine), repeats=3) / n
+            n_hyb = min(n, 6 if pct == 0 else 16)
+            t_hyb = timer(lambda: run_host(hyb.conjunctive, n_hyb),
+                          repeats=2) / n_hyb
+
+            # JAX batched path (jit once per shape, amortized)
+            B = len(queries)
+            fn = jax.jit(jax.vmap(
+                lambda a, b, c_, d_: jnp.where(
+                    b > 0,
+                    conjunctive_multi(qidx.index, qidx.completions, a, b, c_, d_, k),
+                    single_term_topk(qidx.index, qidx.rmq_minimal, c_, d_, k))))
+            fn(pids, plen, tl, tr)[0].block_until_ready()
+            t_jax = timer(lambda: fn(pids, plen, tl, tr).block_until_ready(),
+                          repeats=3, warmup=0) / n
+            emit(f"conj_heap_d{d}_{pct}pct", t_heap * 1e6, "")
+            emit(f"conj_hyb_d{d}_{pct}pct", t_hyb * 1e6, "")
+            emit(f"conj_fwd_d{d}_{pct}pct", t_fwd * 1e6, "")
+            emit(f"conj_fc_d{d}_{pct}pct", t_fc * 1e6, "")
+            emit(f"conj_jaxfwd_d{d}_{pct}pct", t_jax * 1e6, f"batch={B}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Table 3: front-coded dictionary space/time by bucket size.
+
+Reports MiB, bytes-per-string, and per-string timings for Extract, Locate,
+and LocatePrefix at 0/25/50/75% retained characters.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .common import bench_corpus, timer, emit, QUICK
+from repro.core import FrontCodedStore
+from repro.core.strings import encode_strings
+
+
+def main():
+    qidx, kept, host, rows, d_of_row = bench_corpus()
+    terms = sorted({t for q in kept for t in q.split()})
+    raw_bytes = sum(len(t) + 1 for t in terms)
+    rng = np.random.default_rng(0)
+    n_q = 200 if QUICK else 800
+    sample = [terms[i] for i in rng.integers(0, len(terms), n_q)]
+
+    for bucket in ([16] if QUICK else [4, 16, 64, 256]):
+        fc = FrontCodedStore.build(terms, bucket_size=bucket, max_chars=24)
+        mib = fc.encoded_bytes() / 2**20
+        bps = fc.encoded_bytes() / len(terms)
+        import jax
+        ex_f = jax.jit(lambda i: fc.extract(i))
+        loc_f = jax.jit(lambda c: fc.locate(c))
+        lp_f = jax.jit(lambda c, l: fc.locate_prefix(c, l))
+        ids = jnp.asarray(rng.integers(0, len(terms), n_q), jnp.int32)
+        t_ex = timer(lambda: ex_f(ids).block_until_ready()) / n_q
+        chars = jnp.asarray(encode_strings(sample, 24))
+        t_loc = timer(lambda: loc_f(chars).block_until_ready()) / n_q
+        emit(f"dict_fc_b{bucket}_extract", t_ex * 1e6,
+             f"MiB={mib:.2f};bps={bps:.2f};raw_bps={raw_bytes/len(terms):.2f}")
+        emit(f"dict_fc_b{bucket}_locate", t_loc * 1e6, "")
+        for pct in (0, 25, 50, 75):
+            pref = [t[: max(1, int(len(t) * pct / 100))] for t in sample]
+            pc = jnp.asarray(encode_strings(pref, 24))
+            pl = jnp.asarray([len(p) for p in pref], jnp.int32)
+            t_lp = timer(lambda: [x.block_until_ready()
+                                  for x in lp_f(pc, pl)]) / n_q
+            emit(f"dict_fc_b{bucket}_locate_prefix_{pct}pct", t_lp * 1e6, "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Table 6: % better-scored results of conjunctive vs prefix search.
+
+Effectiveness metric per the paper: |Sc(q) \\ Sp(q)| / |Sp(q)| x 100, where
+scores are docids (lower docid = better score) and Sc always covers Sp.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import bench_corpus, sample_eval_queries, emit, QUICK
+from repro.core import parse_queries
+
+
+def main():
+    qidx, kept, host, rows, d_of_row = bench_corpus()
+    k = 10
+    for pct in ((25, 75) if QUICK else (0, 25, 50, 75)):
+        buckets = sample_eval_queries(kept, pct, n_per_bucket=10 if QUICK else 24,
+                                      seed=pct + 100)
+        for d, queries in sorted(buckets.items()):
+            if d > 7 or not queries:
+                continue
+            pids, plen, pok, suf, slen = parse_queries(qidx.dictionary, queries)
+            tl, tr = qidx.dictionary.locate_prefix(suf, slen)
+            better, base, covered_c, covered_p = 0, 0, 0, 0
+            for i in range(len(queries)):
+                prefix = [int(x) for x in np.asarray(pids[i]) if x]
+                lo, hi = int(tl[i]), int(tr[i])
+                sc = host.brute_conjunctive(prefix, lo, hi, k)
+                sp = host.brute_prefix_search(prefix, lo, hi, k)
+                covered_c += bool(sc)
+                covered_p += bool(sp)
+                if sp:
+                    better += len(set(sc) - set(sp))
+                    base += len(sp)
+            pct_better = 100.0 * better / max(base, 1)
+            emit(f"effect_d{d}_{pct}pct", pct_better,
+                 f"coverage_conj={covered_c};coverage_prefix={covered_p};n={len(queries)}")
+
+
+if __name__ == "__main__":
+    main()

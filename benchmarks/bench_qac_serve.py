@@ -1,0 +1,44 @@
+"""Beyond-paper headline: batched QAC serving throughput (the TPU plan).
+
+Amortized us/query and QPS of the batched complete() at several batch sizes,
+plus the docid-striped distributed path on a local 1x{S} stripes loop —
+paper §1 reports 135k QPS @ 80 cores; this is the single-host CPU figure for
+the same algorithm vectorized.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import bench_corpus, sample_eval_queries, timer, emit, QUICK
+from repro.core import parse_queries
+from repro.core.striped import build_striped
+from repro.serve.qac import qac_serve_step, qac_serve_striped
+
+
+def main():
+    qidx, kept, host, rows, d_of_row = bench_corpus()
+    buckets = sample_eval_queries(kept, 50, n_per_bucket=200)
+    queries = [q for qs in buckets.values() for q in qs]
+    for B in ((64,) if QUICK else (64, 256, 1024)):
+        qs = (queries * (B // len(queries) + 1))[:B]
+        pids, plen, pok, suf, slen = parse_queries(qidx.dictionary, qs)
+        fn = jax.jit(lambda a, b, c, d: qac_serve_step(qidx, a, b, c, d, k=10))
+        fn(pids, plen, suf, slen).block_until_ready()
+        t = timer(lambda: fn(pids, plen, suf, slen).block_until_ready(),
+                  repeats=3, warmup=0)
+        emit(f"qac_serve_batch{B}", t / B * 1e6, f"qps={B/t:.0f}")
+
+    striped = build_striped(rows, d_of_row, qidx.dictionary.n_terms, 4)
+    B = 64
+    qs = (queries * (B // len(queries) + 1))[:B]
+    pids, plen, pok, suf, slen = parse_queries(qidx.dictionary, qs)
+    got = qac_serve_striped(striped, qidx.dictionary, pids, plen, suf, slen, k=10)
+    want = qac_serve_step(qidx, pids, plen, suf, slen, k=10)
+    agree = float(np.mean(np.asarray(got) == np.asarray(want)))
+    emit("qac_striped_agreement", agree * 100, "pct_identical_to_single_index")
+
+
+if __name__ == "__main__":
+    main()

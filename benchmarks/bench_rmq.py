@@ -1,0 +1,30 @@
+"""Paper Fig 6b: RMQ top-k timing by query-range size (number of terms /
+suffix % controls the lexicographic range width)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import bench_corpus, timer, emit, QUICK
+from repro.core.rmq import topk_in_range
+
+
+def main():
+    qidx, kept, host, rows, d_of_row = bench_corpus()
+    N = qidx.completions.n
+    rng = np.random.default_rng(3)
+    B = 64 if QUICK else 256
+    for width in (16, 256, 4096, N // 2):
+        p = rng.integers(0, max(N - width, 1), B).astype(np.int32)
+        q = np.minimum(p + width, N).astype(np.int32)
+        fn = jax.jit(jax.vmap(
+            lambda a, b: topk_in_range(qidx.rmq_docids, a, b, 10)[0]))
+        fn(jnp.asarray(p), jnp.asarray(q)).block_until_ready()
+        t = timer(lambda: fn(jnp.asarray(p), jnp.asarray(q)).block_until_ready(),
+                  repeats=3, warmup=0) / B
+        emit(f"rmq_top10_width{width}", t * 1e6, f"batch={B}")
+
+
+if __name__ == "__main__":
+    main()

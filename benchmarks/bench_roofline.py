@@ -1,0 +1,43 @@
+"""§Roofline reader: summarize dry-run records into the roofline table."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "src", "repro",
+                       "launch", "dryrun_results")
+
+
+def load_records():
+    recs = []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        d = os.path.join(RESULTS, mesh)
+        if not os.path.isdir(d):
+            continue
+        for f in sorted(os.listdir(d)):
+            if f.endswith(".json"):
+                with open(os.path.join(d, f)) as fh:
+                    recs.append(json.load(fh))
+    return recs
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        print("# no dry-run results yet — run python -m repro.launch.dryrun")
+        return
+    for r in recs:
+        if not r.get("ok") or "skipped" in r:
+            continue
+        name = f"roofline_{r['mesh']}_{r['arch']}_{r['shape']}"
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        emit(name, bound * 1e6,
+             f"dom={r['dominant']};compute_s={r['compute_s']:.3e};"
+             f"memory_s={r['memory_s']:.3e};collective_s={r['collective_s']:.3e};"
+             f"frac={r.get('roofline_frac')}")
+
+
+if __name__ == "__main__":
+    main()

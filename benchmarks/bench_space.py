@@ -1,0 +1,61 @@
+"""Paper Table 7: space usage of the Fwd / FC / Heap solution variants.
+
+Component accounting (bytes + bytes-per-completion):
+  Fwd  = dictionary + completions(trie/columnar) + RMQ(docids) + inverted
+         index + forward index + RMQ(minimal)
+  FC   = Fwd - forward index + front-coded completions (extraction source)
+  Heap = FC - RMQ(minimal)
+Both the in-memory TPU layout (int32 arrays) and the paper-style compressed
+encodings (EF postings, FC strings) are reported.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import bench_corpus, emit
+from repro.core.fc import FrontCodedStore
+from repro.core.codecs import index_bpi
+
+
+def main():
+    qidx, kept, host, rows, d_of_row = bench_corpus()
+    N = qidx.completions.n
+    raw = sum(len(q) + 1 for q in kept)
+
+    d_bytes = qidx.dictionary.space_bytes()
+    comp_bytes = qidx.completions.space_bytes()
+    fwd_bytes = qidx.completions.fwd_space_bytes()
+    inv_bytes = qidx.index.space_bytes()
+    rmq_doc = qidx.rmq_docids.space_bytes() + qidx.rmq_docids.values.nbytes
+    rmq_min = qidx.rmq_minimal.space_bytes() + qidx.rmq_minimal.values.nbytes
+    fc_comp = FrontCodedStore.build(list(kept), bucket_size=16, max_chars=96)
+
+    from repro.core.ref_engines import HybIndex
+    hyb_bytes = HybIndex(host, c=1e-2).space_bytes()
+    fwd_total = d_bytes + comp_bytes + rmq_doc + inv_bytes + fwd_bytes + rmq_min
+    fc_total = d_bytes + comp_bytes + rmq_doc + inv_bytes + fc_comp.encoded_bytes() + rmq_min
+    heap_total = d_bytes + comp_bytes + rmq_doc + inv_bytes + fc_comp.encoded_bytes()
+
+    # paper-style compressed postings (EF) vs raw int32
+    lists = [np.asarray(host.plist(t)) for t in range(1, host.n_terms + 1)]
+    bpi_ef = index_bpi(lists, "ef")
+    bpi_raw = 32.0
+    inv_ef_bytes = int(inv_bytes * bpi_ef / bpi_raw)
+
+    emit("space_fwd_bpc", fwd_total / N,
+         f"MiB={fwd_total/2**20:.2f};raw_MiB={raw/2**20:.2f}")
+    emit("space_fc_bpc", fc_total / N, f"MiB={fc_total/2**20:.2f}")
+    emit("space_heap_bpc", heap_total / N, f"MiB={heap_total/2**20:.2f}")
+    hyb_total = heap_total - inv_bytes + hyb_bytes
+    emit("space_hyb_bpc", hyb_total / N, f"MiB={hyb_total/2**20:.2f}")
+    emit("space_fwd_ef_bpc", (fwd_total - inv_bytes + inv_ef_bytes) / N,
+         f"EF_postings;MiB={(fwd_total - inv_bytes + inv_ef_bytes)/2**20:.2f}")
+    for name, b in [("dictionary", d_bytes), ("completions", comp_bytes),
+                    ("rmq_docids", rmq_doc), ("inverted", inv_bytes),
+                    ("forward", fwd_bytes), ("rmq_minimal", rmq_min),
+                    ("fc_completions", fc_comp.encoded_bytes())]:
+        emit(f"space_component_{name}", b / N, f"MiB={b/2**20:.2f}")
+
+
+if __name__ == "__main__":
+    main()

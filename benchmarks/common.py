@@ -1,0 +1,55 @@
+"""Shared benchmark harness: corpus construction + timing utilities."""
+from __future__ import annotations
+
+import functools
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+
+
+def timer(fn, *args, repeats: int = 5, warmup: int = 1):
+    """Median wall time of fn(*args) in seconds."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+@functools.lru_cache(maxsize=2)
+def bench_corpus(n_queries: int = 0):
+    """Shared synthetic AOL-like corpus + built index + host oracle."""
+    from repro.text import SynthLogConfig, generate_query_log
+    from repro.core import build_qac_index
+    from repro.core.builder import build_corpus
+    from repro.core.ref_engines import HostIndex
+
+    n = n_queries or (3_000 if QUICK else 15_000)
+    qs, sc = generate_query_log(SynthLogConfig(
+        n_queries=n, vocab_size=max(n // 5, 500), mean_term_chars=7.0, seed=42))
+    qidx, kept, scores = build_qac_index(qs, sc)
+    dictionary, rows, sc2, kept2 = build_corpus(qs, sc)
+    order = np.lexsort(tuple(rows[:, j] for j in range(rows.shape[1] - 1, -1, -1)) + (-sc2,))
+    d_of_row = np.empty(len(rows), dtype=np.int32)
+    d_of_row[order] = np.arange(len(rows), dtype=np.int32)
+    host = HostIndex(rows, d_of_row, dictionary.n_terms)
+    return qidx, kept, host, rows, d_of_row
+
+
+def sample_eval_queries(kept, retain_pct: int, n_per_bucket: int = 50, seed=7):
+    from repro.text import make_eval_queries
+    rng = np.random.default_rng(seed)
+    return make_eval_queries(list(kept), rng, n_per_bucket, retain_pct)
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.3f},{derived}")

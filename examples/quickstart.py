@@ -1,0 +1,42 @@
+"""Quickstart: build a QAC index from a scored query log and complete queries.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (build_qac_index, parse_queries, INF_DOCID,
+                        prefix_search_topk, conjunctive_multi)
+from repro.serve.qac import qac_serve_step
+from repro.core.strings import decode_string
+
+# the paper's Table 1 example corpus, scores descending by listed order
+log = ["audi", "audi a3 sport", "audi q8 sedan", "bmw", "bmw x1",
+       "bmw i3 sedan", "bmw i3 sport", "bmw i3 sportback", "bmw i8 sport"]
+scores = [9, 6, 3, 8, 5, 1, 4, 2, 7]  # higher = better
+scores = [10 - s for s in scores]      # docid order of the paper
+
+qidx, kept, _ = build_qac_index(log, scores)
+
+
+def show(query: str):
+    pids, plen, ok, suf, slen = parse_queries(qidx.dictionary, [query])
+    docids = np.asarray(qac_serve_step(qidx, pids, plen, suf, slen, k=3))[0]
+    out = []
+    for d in docids:
+        if d == INF_DOCID:
+            break
+        terms, n = qidx.completions.extract(jnp.int32(int(d)))
+        chars = qidx.dictionary.extract(terms[: int(n)])
+        out.append(" ".join(decode_string(np.asarray(c)) for c in np.asarray(chars)))
+    print(f"{query!r:18s} -> {out}")
+
+
+print("conjunctive-search completions (paper Fig 1b):")
+show("bmw i3 s")     # prefix-search also finds these
+show("sport")        # single-term: prefix-search finds nothing better
+show("i3")           # no completion STARTS with i3 — conjunctive still answers
+show("bmw sport i8") # out-of-order terms

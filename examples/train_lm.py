@@ -1,0 +1,15 @@
+"""Train a (reduced) smollm for a few hundred steps with the full stack:
+data pipeline, jit'd train step, checkpointing, fault drill.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.argv = [sys.argv[0], "--arch", "smollm-360m",
+            "--steps", sys.argv[sys.argv.index("--steps") + 1]
+            if "--steps" in sys.argv else "200",
+            "--ckpt-dir", "/tmp/repro_lm_ckpt", "--drill"]
+
+from repro.launch.train import main
+
+main()

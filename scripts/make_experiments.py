@@ -1,0 +1,100 @@
+"""Generate EXPERIMENTS.md from dry-run/hillclimb/benchmark artifacts."""
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+RES = os.path.join(ROOT, "src", "repro", "launch", "dryrun_results")
+
+
+def load(d):
+    out = {}
+    for f in sorted(glob.glob(os.path.join(RES, d, "*.json"))):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt(x, digits=2):
+    if x is None:
+        return "-"
+    if isinstance(x, float):
+        return f"{x:.{digits}e}" if (abs(x) < 1e-2 or abs(x) > 1e4) else f"{x:.{digits}f}"
+    return str(x)
+
+
+def roofline_table(recs, title):
+    lines = [f"### {title}", "",
+             "| arch | shape | kind | dominant | compute s | memory s | "
+             "collective s | coll GB/dev | peak GiB/dev | roofline frac | note |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape), r in sorted(recs.items()):
+        if "skipped" in r:
+            lines.append(f"| {arch} | {shape} | {r['kind']} | SKIP | - | - | - "
+                         f"| - | - | - | {r['skipped'][:60]} |")
+            continue
+        if not r.get("ok"):
+            lines.append(f"| {arch} | {shape} | {r['kind']} | FAIL | - | - | - "
+                         f"| - | - | - | {r.get('error','')[:60]} |")
+            continue
+        peak = (r["bytes_per_device"]["peak"] or 0) / 2**30
+        lines.append(
+            f"| {arch} | {shape} | {r['kind']} | **{r['dominant']}** "
+            f"| {fmt(r['compute_s'])} | {fmt(r['memory_s'])} "
+            f"| {fmt(r['collective_s'])} | {fmt(r['collective_bytes']/1e9)} "
+            f"| {peak:.2f} | {fmt(r.get('roofline_frac'), 3)} "
+            f"| {r.get('note','')[:48]} |")
+    return "\n".join(lines)
+
+
+def perf_table():
+    lines = ["| cell | iteration | hypothesis (abridged) | collective before -> after | frac before -> after | verdict |",
+             "|---|---|---|---|---|---|"]
+    for f in sorted(glob.glob(os.path.join(RES, "perf", "*__it*.json"))):
+        r = json.load(open(f))
+        if not r.get("ok"):
+            continue
+        b = r.get("before", {})
+        hyp = " ".join(r.get("hypothesis", "").split())
+        # verdict: confirmed if collective dropped >5%
+        before_c = b.get("collective_s")
+        after_c = r.get("collective_s")
+        if before_c and after_c is not None:
+            if after_c < before_c * 0.95:
+                verdict = "confirmed"
+            elif after_c <= before_c * 1.05:
+                verdict = "refuted (no effect)"
+            else:
+                verdict = "refuted (worse)"
+        else:
+            verdict = "-"
+        lines.append(
+            f"| {r['arch']}:{r['shape']} | {r['iteration']} | {hyp[:180]} "
+            f"| {fmt(before_c)} -> {fmt(after_c)} "
+            f"| {fmt(b.get('roofline_frac'),3)} -> {fmt(r.get('roofline_frac'),3)} "
+            f"| {verdict} |")
+    return "\n".join(lines)
+
+
+def main():
+    base_sp = load("baseline_pod16x16")
+    base_mp = load("baseline_pod2x16x16")
+    opt_sp = load("pod16x16")
+    opt_mp = load("pod2x16x16")
+    sections = {
+        "BASELINE_SP": roofline_table(base_sp, "Baseline, single pod 16x16 (256 chips)"),
+        "BASELINE_MP": roofline_table(base_mp, "Baseline, multi-pod 2x16x16 (512 chips)"),
+        "OPT_SP": roofline_table(opt_sp, "Optimized (shipped defaults), single pod 16x16"),
+        "OPT_MP": roofline_table(opt_mp, "Optimized (shipped defaults), multi-pod 2x16x16"),
+        "PERF": perf_table(),
+    }
+    tpl = open(os.path.join(ROOT, "EXPERIMENTS.template.md")).read()
+    for k, v in sections.items():
+        tpl = tpl.replace("{{" + k + "}}", v)
+    open(os.path.join(ROOT, "EXPERIMENTS.md"), "w").write(tpl)
+    print("EXPERIMENTS.md written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quick end-to-end smoke of the QAC core on the paper's Table 1 example."""
+import numpy as np
+import jax.numpy as jnp
+
+import sys
+sys.path.insert(0, "src")
+
+from repro.core import (
+    build_qac_index, parse_queries, HostIndex,
+    prefix_search_topk, conjunctive_multi, single_term_topk, INF_DOCID,
+)
+from repro.core.builder import build_corpus
+
+# Table 1 corpus: scores chosen so docids match the paper's assignment
+queries = [
+    "bmw i3 sedan",      # docid 1
+    "bmw i3 sportback",  # docid 2
+    "audi q8 sedan",     # docid 3
+    "bmw i3 sport",      # docid 4
+    "bmw x1",            # docid 5
+    "audi a3 sport",     # docid 6
+    "bmw i8 sport",      # docid 7
+    "bmw",               # docid 8
+    "audi",              # docid 9
+]
+scores = [9 - i for i in range(9)]  # descending by listed order
+
+qidx, kept, sc = build_qac_index(queries, scores)
+print("terms:", qidx.dictionary.n_terms, "completions:", qidx.completions.n)
+
+# paper example: "bmw i3 s" -> conjunctive results (docids 1,2,4) = 0,1,3 (0-based)
+pids, plen, pok, suf, slen = parse_queries(qidx.dictionary, ["bmw i3 s"])
+tl, tr = qidx.dictionary.locate_prefix(suf, slen)
+print("suffix range (1-based, half-open):", int(tl[0]), int(tr[0]))
+res = conjunctive_multi(qidx.index, qidx.completions, pids[0], plen[0], tl[0], tr[0], 3)
+print("conjunctive(bmw i3 s):", res, "(expect [0 1 3])")
+
+res_p = prefix_search_topk(qidx.completions, qidx.rmq_docids, pids[0], plen[0], tl[0], tr[0], 3)
+print("prefix(bmw i3 s):", res_p, "(expect [0 1 3])")
+
+# paper example: single-term "s" -> top-3 should be docids 1,2,3 (0-based 0,1,2)... compute
+pids2, plen2, pok2, suf2, slen2 = parse_queries(qidx.dictionary, ["s"])
+tl2, tr2 = qidx.dictionary.locate_prefix(suf2, slen2)
+res_s = single_term_topk(qidx.index, qidx.rmq_minimal, tl2[0], tr2[0], 3)
+print("single(s):", res_s)
+
+# oracle comparison
+rows = np.zeros((9, 8), dtype=np.int32)
+dictionary, rows, sc2, kept2 = build_corpus(queries, scores)
+order = np.lexsort(tuple(rows[:, j] for j in range(rows.shape[1] - 1, -1, -1)) + (-sc2,))
+d_of_row = np.empty(len(rows), dtype=np.int32)
+d_of_row[order] = np.arange(len(rows))
+host = HostIndex(rows, d_of_row, dictionary.n_terms)
+print("oracle conj:", host.fwd_conjunctive([int(x) for x in np.asarray(pids[0]) if x], int(tl[0]), int(tr[0]), 3))
+print("oracle single:", host.single_term_rmq(int(tl2[0]), int(tr2[0]), 3))
+print("oracle heap:", host.heap_conjunctive([int(x) for x in np.asarray(pids[0]) if x], int(tl[0]), int(tr[0]), 3))
+print("OK" if list(map(int, res)) == host.fwd_conjunctive([int(x) for x in np.asarray(pids[0]) if x], int(tl[0]), int(tr[0]), 3) + [INF_DOCID] * 0 else "MISMATCH")

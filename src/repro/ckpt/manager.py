@@ -1,0 +1,166 @@
+"""Fault-tolerant checkpointing: atomic, async-capable, mesh-elastic.
+
+Layout per step:  <dir>/step_<N>.tmp/  ->  atomic os.replace  ->  <dir>/step_<N>/
+   arrays.npz     every leaf, keys are "/"-joined tree paths
+   manifest.json  treedef structure + shapes/dtypes + user metadata
+
+Restore is *elastic*: arrays are loaded host-side and ``jax.device_put`` with
+whatever shardings the (possibly different) target mesh prescribes — a run
+checkpointed on 512 chips restarts on 256 by construction, because leaves are
+stored as full logical arrays. (On a real multi-host fleet each host gathers
+only its addressable shards; the manifest format is unchanged — noted in
+DESIGN.md.)
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import numpy as np
+import jax
+
+
+def _key_str(p):
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append("/".join(_key_str(p) for p in path))
+        leaves.append(leaf)
+    return names, leaves, jax.tree_util.tree_structure(tree)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    metadata: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    names, leaves, _ = _flatten_with_names(tree)
+    arrays = {n: np.asarray(l) for n, l in zip(names, leaves)}
+    dtypes = {n: str(a.dtype) for n, a in arrays.items()}
+    # numpy can't serialize ml_dtypes (bfloat16 etc.): store a raw-bits view
+    store = {
+        n: (a.view(np.uint16) if a.dtype.itemsize == 2 and "float" in str(a.dtype)
+            and str(a.dtype) not in ("float16",) else a)
+        for n, a in arrays.items()
+    }
+    np.savez(os.path.join(tmp, "arrays.npz"), **store)
+    manifest = {
+        "step": step,
+        "names": names,
+        "shapes": {n: list(a.shape) for n, a in arrays.items()},
+        "dtypes": dtypes,
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)                       # atomic publish
+    return final
+
+
+def restore_checkpoint(directory: str, template: Any, step: Optional[int] = None,
+                       shardings: Any = None):
+    """-> (tree, step). ``template`` fixes the treedef; ``shardings`` (same
+    structure or None) re-places leaves for the current mesh (elastic)."""
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    step = step if step is not None else steps[-1]
+    path = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    names, leaves, treedef = _flatten_with_names(template)
+    new_leaves = []
+    flat_sh = (jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: x is None) if shardings is not None
+        else [None] * len(names))
+    if len(flat_sh) != len(names):
+        flat_sh = [None] * len(names)
+    import ml_dtypes
+    for n, tmpl, sh in zip(names, leaves, flat_sh):
+        arr = data[n]
+        want = np.dtype(tmpl.dtype) if not hasattr(tmpl.dtype, "name") \
+            else tmpl.dtype
+        if arr.dtype == np.uint16 and str(want) == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        else:
+            arr = arr.astype(want)
+        if sh is not None:
+            new_leaves.append(jax.device_put(arr, sh))
+        else:
+            new_leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step
+
+
+class CheckpointManager:
+    """Retention + optional async save on a background thread."""
+
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any, metadata: Optional[dict] = None):
+        # materialize on host BEFORE handing to the thread (donated buffers)
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+        if self.async_save:
+            self.wait()
+
+            def run():
+                try:
+                    save_checkpoint(self.directory, step, host_tree, metadata)
+                    self._gc()
+                except BaseException as e:  # surfaced on next wait()
+                    self._error = e
+
+            self._thread = threading.Thread(target=run, daemon=True)
+            self._thread.start()
+        else:
+            save_checkpoint(self.directory, step, host_tree, metadata)
+            self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def restore(self, template, step=None, shardings=None):
+        self.wait()
+        return restore_checkpoint(self.directory, template, step, shardings)
+
+    def latest_step(self) -> Optional[int]:
+        if not os.path.isdir(self.directory):
+            return None
+        steps = [int(d.split("_")[1]) for d in os.listdir(self.directory)
+                 if d.startswith("step_") and not d.endswith(".tmp")]
+        return max(steps) if steps else None
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,41 @@
+"""Arch registry: ``--arch <id>`` resolves here. One module per assigned
+architecture (exact public-literature configs) + the paper's own system."""
+from __future__ import annotations
+
+from .base import Cell, Lowerable  # noqa: F401
+from .smollm_360m import ARCH as _smollm
+from .qwen3_14b import ARCH as _qwen3
+from .gemma2_2b import ARCH as _gemma2
+from .qwen2_moe_a2_7b import ARCH as _qwen2moe
+from .qwen3_moe_235b_a22b import ARCH as _qwen3moe
+from .mace import ARCH as _mace
+from .mind import ARCH as _mind
+from .bst import ARCH as _bst
+from .din import ARCH as _din
+from .fm import ARCH as _fm
+from .qac_ebay import ARCH as _qac
+
+ARCHS = {
+    a.arch_id: a
+    for a in [_smollm, _qwen3, _gemma2, _qwen2moe, _qwen3moe,
+              _mace, _mind, _bst, _din, _fm, _qac]
+}
+
+
+def get_arch(arch_id: str):
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch '{arch_id}'; have {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def list_archs():
+    return sorted(ARCHS)
+
+
+def all_cells(include_qac: bool = True):
+    cells = []
+    for aid in list_archs():
+        if not include_qac and aid == "qac-ebay":
+            continue
+        cells.extend(get_arch(aid).cells())
+    return cells

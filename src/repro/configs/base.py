@@ -1,0 +1,79 @@
+"""Arch/shape cell machinery shared by every config.
+
+An ArchDef yields, per (arch x shape) cell, everything the dry-run needs:
+the step callable, ShapeDtypeStruct argument specs, and in/out shardings for
+the target mesh — with NO device allocation (jax.eval_shape end-to-end).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                     # train | prefill | decode | serve | retrieval
+    skip: Optional[str] = None    # reason if inapplicable (still reported)
+
+
+@dataclasses.dataclass
+class Lowerable:
+    """One dry-run unit: jit(fn, in_shardings, out_shardings).lower(*specs)."""
+    fn: Callable
+    arg_specs: tuple
+    in_shardings: Any
+    out_shardings: Any
+    static_argnums: tuple = ()
+    donate_argnums: tuple = ()
+    # analytic model FLOPs for §Roofline (6ND etc.); None = n/a
+    model_flops: Optional[float] = None
+    # analytic minimum HBM traffic in bytes (global, per step); None = n/a
+    model_bytes: Optional[float] = None
+    note: str = ""
+
+
+def mesh_wrapped(fn, mesh, rules):
+    """Make fn trace inside the mesh context (jit traces lazily, AFTER the
+    arch-def's ``with mesh_context`` block has exited — without this,
+    shard_hint/get_mesh see no mesh during lowering)."""
+    import functools as _ft
+    from ..distributed.sharding import mesh_context as _mc
+
+    @_ft.wraps(fn)
+    def wrapped(*a, **k):
+        with _mc(mesh, rules):
+            return fn(*a, **k)
+
+    return wrapped
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def ns(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def tree_of(sharding, tree):
+    """Broadcast one sharding over a pytree of specs."""
+    return jax.tree_util.tree_map(lambda _: sharding, tree)
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult

@@ -1,0 +1,148 @@
+"""GNN (MACE) ArchDef: 4 assigned graph shapes.
+
+Sharding: edges (the big axis) over every mesh axis; node state over
+(pod, data) when large. The message gather h[senders] across node shards is
+where full-graph GNNs become collective-bound — visible in §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from .base import Cell, Lowerable, batch_axes, ns, replicated, sds, pad_to, mesh_wrapped
+from ..models.mace import MACEConfig, MACEModel
+from ..optim.adamw import AdamWConfig
+from ..train.steps import init_train_state, make_gnn_train_step, TrainState
+from ..distributed.sharding import mesh_context
+
+# shape table (assigned): padded sizes are chosen divisible by 512
+GNN_SHAPES = {
+    "full_graph_sm": dict(kind="train", n_nodes=2_708, n_edges=10_556,
+                          d_feat=1_433, n_classes=7, task="node_class",
+                          pad_nodes=3_072, pad_edges=10_752, n_graphs=1),
+    "minibatch_lg": dict(kind="train", n_nodes=232_965, n_edges=114_615_892,
+                         batch_nodes=1_024, fanout=(15, 10), d_feat=602,
+                         n_classes=41, task="node_class",
+                         pad_nodes=172_032, pad_edges=169_984, n_graphs=1),
+    "ogb_products": dict(kind="train", n_nodes=2_449_029, n_edges=61_859_140,
+                         d_feat=100, n_classes=47, task="node_class",
+                         pad_nodes=2_457_600, pad_edges=61_865_984, n_graphs=1),
+    "molecule": dict(kind="train", n_nodes=30, n_edges=64, batch=128,
+                     task="energy", pad_nodes=3_840, pad_edges=8_192,
+                     n_graphs=128),
+}
+
+
+@dataclasses.dataclass
+class GNNArch:
+    arch_id: str
+    base_cfg: MACEConfig
+    smoke_cfg: MACEConfig
+
+    family = "gnn"
+
+    def cells(self):
+        return [Cell(self.arch_id, s, spec["kind"])
+                for s, spec in GNN_SHAPES.items()]
+
+    def cfg_for(self, shape: str) -> MACEConfig:
+        s = GNN_SHAPES[shape]
+        if s["task"] == "node_class":
+            return dataclasses.replace(
+                self.base_cfg, d_feat=s["d_feat"], n_classes=s["n_classes"],
+                task="node_class")
+        return dataclasses.replace(self.base_cfg, d_feat=0, task="energy")
+
+    def batch_specs(self, shape: str):
+        s = GNN_SHAPES[shape]
+        N, E = s["pad_nodes"], s["pad_edges"]
+        specs = {
+            "positions": sds((N, 3), jnp.float32),
+            "node_mask": sds((N,), jnp.float32),
+            "senders": sds((E,), jnp.int32),
+            "receivers": sds((E,), jnp.int32),
+            "edge_mask": sds((E,), jnp.float32),
+            "graph_ids": sds((N,), jnp.int32),
+        }
+        if s["task"] == "node_class":
+            specs["node_feat"] = sds((N, s["d_feat"]), jnp.float32)
+            specs["labels"] = sds((N,), jnp.int32)
+            specs["label_mask"] = sds((N,), jnp.float32)
+        else:
+            specs["node_feat"] = sds((N,), jnp.int32)
+            specs["targets"] = sds((s["n_graphs"],), jnp.float32)
+        return specs
+
+    def lowerable(self, shape: str, mesh: Mesh) -> Lowerable:
+        s = GNN_SHAPES[shape]
+        cfg = self.cfg_for(shape)
+        model = MACEModel(cfg)
+        bax = batch_axes(mesh)
+        all_ax = tuple(mesh.axis_names)
+        N, E = s["pad_nodes"], s["pad_edges"]
+        n_dev = 1
+        for a in mesh.axis_names:
+            n_dev *= mesh.shape[a]
+        # shard nodes/edges over every axis when divisible, else batch axes
+        node_ax = all_ax if N % n_dev == 0 else (bax if N % _size(mesh, bax) == 0 else ())
+        edge_ax = all_ax if E % n_dev == 0 else (bax if E % _size(mesh, bax) == 0 else ())
+
+        with mesh_context(mesh, {"nodes": node_ax or None, "edges": edge_ax or None}):
+            params_s = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+            state_s = jax.eval_shape(functools.partial(init_train_state), params_s)
+            p_sh = jax.tree_util.tree_map(lambda _: replicated(mesh), params_s)
+            state_sh = TrainState(
+                params=p_sh,
+                opt={"mu": p_sh, "nu": p_sh, "step": replicated(mesh)},
+                ef={},
+            )
+            batch_s = self.batch_specs(shape)
+
+            def field_sh(name, spec):
+                ax = node_ax if spec.shape[0] == N else (
+                    edge_ax if spec.shape[0] == E else ())
+                return ns(mesh, ax if ax else None,
+                          *([None] * (len(spec.shape) - 1)))
+
+            b_sh = {k: field_sh(k, v) for k, v in batch_s.items()}
+            step = make_gnn_train_step(
+                model, AdamWConfig(total_steps=10_000), task=s["task"],
+                n_graphs=s["n_graphs"])
+            met = {"grad_norm": replicated(mesh), "lr": replicated(mesh),
+                   "loss": replicated(mesh)}
+            # analytic FLOPs: per edge, TP (9*9*9*C mults x3 orders) + radial
+            C = cfg.d_hidden
+            per_edge = cfg.n_layers * C * (3 * 9 * 9 * 9 + 2 * cfg.n_rbf * 64)
+            per_node = cfg.n_layers * C * C * 9 * 5
+            flops = 2.0 * (E * per_edge + N * per_node)
+            # traffic: edge message stream rw x layers x fwd+bwd, node state,
+            # features, dense AdamW on all params (34x)
+            import numpy as _np
+            pbytes = sum(_np.prod(l.shape) * 4 for l in
+                         jax.tree_util.tree_leaves(params_s))
+            feat_b = (N * s["d_feat"] * 4 if s["task"] == "node_class" else N * 4)
+            mbytes = (34.0 * pbytes
+                      + 3.0 * cfg.n_layers * (4 * E * C * 9 * 4 + 4 * N * C * 9 * 4)
+                      + 2 * feat_b + 3 * E * 12)
+            return Lowerable(
+                fn=mesh_wrapped(step, mesh,
+                                {"nodes": node_ax or None, "edges": edge_ax or None}),
+                arg_specs=(state_s, batch_s),
+                in_shardings=(state_sh, b_sh),
+                out_shardings=(state_sh, met),
+                donate_argnums=(0,),
+                model_flops=flops,
+                model_bytes=mbytes,
+                note=f"{s['task']} N={N} E={E} nodes->{node_ax} edges->{edge_ax}",
+            )
+
+
+def _size(mesh, axes):
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return max(out, 1)

@@ -1,0 +1,226 @@
+"""LM-family ArchDef: shapes, specs, and shardings for the 5 transformer archs.
+
+Shapes (assigned): train_4k (train), prefill_32k (prefill), decode_32k and
+long_500k (serve_step: one token against a KV cache). long_500k runs only for
+archs with a sub-quadratic path (gemma2 local/global); pure full-attention
+archs skip it (DESIGN.md §5).
+
+Sharding plans (DESIGN.md §6):
+  train/prefill: batch->(pod,data); heads/kv_heads/d_ff/experts/vocab->model;
+                 ZeRO-1 moments additionally over data.
+  decode:        batch->(pod,data); KV-cache seq->model  (sequence-parallel
+                 decode: GSPMD lowers the attention softmax over the sharded
+                 cache to local partial-softmax + small cross-shard LSE merge);
+                 heads replicated; experts->model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .base import Cell, Lowerable, batch_axes, ns, replicated, sds, mesh_wrapped
+from ..models.transformer import TransformerConfig, MoESettings, TransformerLM
+from ..optim.adamw import AdamWConfig
+from ..train.steps import init_train_state, make_lm_train_step, TrainState
+from ..serve.lm import prefill_step
+from ..distributed.sharding import (
+    AxisRules, DEFAULT_LM_RULES, mesh_context, tree_shardings, zero1_shardings,
+    logical_sharding,
+)
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+DECODE_RULES: AxisRules = dict(DEFAULT_LM_RULES)
+DECODE_RULES.update({
+    "heads": None, "kv_heads": None, "d_ff": "model",
+    "kv_seq": "model", "vocab": "model", "experts": "model",
+})
+
+
+@dataclasses.dataclass
+class LMArch:
+    arch_id: str
+    cfg: TransformerConfig
+    smoke_cfg: TransformerConfig
+    supports_long: bool = False
+    train_microbatches: int = 1
+    rule_overrides: dict = None          # per-arch logical-axis remaps
+    decode_rule_overrides: dict = None   # extra remaps for decode cells only
+    prefill_rule_overrides: dict = None  # extra remaps for prefill cells only
+
+    family = "lm"
+
+    # -- analytic minimum HBM traffic (global bytes per step) ---------------
+    def _traffic(self, kind: str, B: int, S: int) -> float:
+        """Traffic model (documented in EXPERIMENTS.md §Roofline):
+        train:   params bf16 read fwd+bwd+recompute (3x2P) + update rw (2x2P)
+                 + fp32 moments rw (4x4P) + fp32 grads rw (2x4P) = 34P
+                 + activation stream ~2x per layer (remat) + logits 3x f32
+        prefill: params 2P + activation stream 1x + kv write
+        decode:  params 2P (every weight read once per token — the serving
+                 bound) + full KV cache read + logits
+        """
+        c = self.cfg
+        P = c.param_count()
+        d = c.d_model
+        if c.moe:
+            f_eff = c.moe.top_k * c.moe.d_expert + c.moe.shared_d_ff
+        else:
+            f_eff = c.d_ff
+        tok = B * S
+        act_layer = tok * (4 * d + 2 * f_eff) * 2          # bf16 stream
+        logits = 3.0 * tok * c.vocab * 4
+        kv = tok * 2 * c.n_kv_heads * c.head_dim * 2
+        if kind == "train":
+            return 34.0 * P + 2 * c.n_layers * act_layer + logits
+        if kind == "prefill":
+            return 2.0 * P + c.n_layers * act_layer + kv + 3.0 * B * c.vocab * 4
+        # decode: S == cache length
+        cache = 0
+        for i in range(c.layers_per_step):
+            w = c.window_of(i)
+            Sc = min(w, S) if w > 0 else S
+            cache += (c.n_layers // c.layers_per_step) * B * Sc \
+                * 2 * c.n_kv_heads * c.head_dim * 2
+        return 2.0 * P + cache + 3.0 * B * c.vocab * 4
+
+    def cells(self):
+        out = []
+        for shape, spec in LM_SHAPES.items():
+            skip = None
+            if shape == "long_500k" and not self.supports_long:
+                skip = ("pure full-attention arch: no sub-quadratic path for "
+                        "524k decode (DESIGN.md §5)")
+            out.append(Cell(self.arch_id, shape, spec["kind"], skip))
+        return out
+
+    # ------------------------------------------------------------------
+    def _model(self, shape: str) -> TransformerLM:
+        cfg = self.cfg
+        if LM_SHAPES[shape]["kind"] != "train":
+            cfg = dataclasses.replace(cfg, remat=False)
+        return TransformerLM(cfg)
+
+    def _param_specs(self, model):
+        return jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+
+    def lowerable(self, shape: str, mesh: Mesh) -> Lowerable:
+        spec = LM_SHAPES[shape]
+        kind = spec["kind"]
+        B, S = spec["batch"], spec["seq"]
+        model = self._model(shape)
+        c = model.cfg
+        bax = batch_axes(mesh)
+        bsz = 1
+        for a in bax:
+            bsz *= mesh.shape[a]
+        bax = bax if B % bsz == 0 else None
+        n_chips = 1
+        for a in mesh.axis_names:
+            n_chips *= mesh.shape[a]
+
+        if kind == "train":
+            rules = dict(DEFAULT_LM_RULES, **(self.rule_overrides or {}))
+            with mesh_context(mesh, rules):
+                params_s = self._param_specs(model)
+                axes = model.param_axes(params_s)
+                p_sh = tree_shardings(axes, mesh, rules)
+                state_s = jax.eval_shape(
+                    functools.partial(init_train_state, compress="pod" in mesh.axis_names and mesh.shape.get("pod", 1) > 1),
+                    params_s)
+                opt_mom_sh = zero1_shardings(params_s, p_sh, mesh)
+                state_sh = TrainState(
+                    params=p_sh,
+                    opt={"mu": opt_mom_sh, "nu": opt_mom_sh,
+                         "step": replicated(mesh)},
+                    ef=jax.tree_util.tree_map(lambda _: replicated(mesh), state_s.ef)
+                    if state_s.ef else {},
+                )
+                if state_s.ef:
+                    state_sh = dataclasses.replace(state_sh, ef=opt_mom_sh)
+                batch_s = {
+                    "tokens": sds((B, S), jnp.int32),
+                    "targets": sds((B, S), jnp.int32),
+                    "mask": sds((B, S), jnp.float32),
+                }
+                b_sh = {k: ns(mesh, bax, None) for k in batch_s}
+                step = make_lm_train_step(
+                    model, AdamWConfig(total_steps=10_000),
+                    microbatches=self.train_microbatches,
+                    compress_pod=mesh.shape.get("pod", 1) > 1)
+                met_sh = {"grad_norm": replicated(mesh), "lr": replicated(mesh),
+                          "loss": replicated(mesh)}
+                return Lowerable(
+                    fn=mesh_wrapped(step, mesh, rules),
+                    arg_specs=(state_s, batch_s),
+                    in_shardings=(state_sh, b_sh),
+                    out_shardings=(state_sh, met_sh),
+                    donate_argnums=(0,),
+                    model_flops=6.0 * c.active_param_count() * B * S,
+                    model_bytes=self._traffic("train", B, S),
+                    note=f"train {B}x{S}, mb={self.train_microbatches}, ZeRO-1",
+                )
+
+        if kind == "prefill":
+            rules = dict(DEFAULT_LM_RULES)
+            rules.update(self.rule_overrides or {})
+            rules.update(self.prefill_rule_overrides or {})
+            with mesh_context(mesh, rules):
+                params_s = self._param_specs(model)
+                p_sh = tree_shardings(model.param_axes(params_s), mesh, rules)
+                toks = sds((B, S), jnp.int32)
+                fn = functools.partial(prefill_step, model)
+                return Lowerable(
+                    fn=mesh_wrapped(fn, mesh, rules),
+                    arg_specs=(params_s, toks),
+                    in_shardings=(p_sh, ns(mesh, bax, None)),
+                    out_shardings=ns(mesh, bax, "model"),
+                    model_flops=2.0 * c.active_param_count() * B * S,
+                    model_bytes=self._traffic("prefill", B, S),
+                    note=f"prefill {B}x{S}",
+                )
+
+        # decode
+        rules = dict(DECODE_RULES)
+        rules.update(self.rule_overrides or {})
+        rules.update(self.decode_rule_overrides or {})
+        with mesh_context(mesh, rules):
+            params_s = self._param_specs(model)
+            p_sh = tree_shardings(model.param_axes(params_s), mesh, rules)
+            cache_s = jax.eval_shape(lambda: model.init_cache(B, S))
+            kv_sh = tuple(
+                ns(mesh, None, bax, None,
+                   "model" if k.shape[3] % mesh.shape["model"] == 0 else None,
+                   None)
+                for k in cache_s["k"]
+            )
+            cache_sh = {"pos": ns(mesh, bax), "k": kv_sh, "v": kv_sh}
+            toks = sds((B,), jnp.int32)
+
+            def fn(params, cache, tokens):
+                return model.decode_step(params, cache, tokens)
+
+            return Lowerable(
+                fn=mesh_wrapped(fn, mesh, rules),
+                arg_specs=(params_s, cache_s, toks),
+                in_shardings=(p_sh, cache_sh, ns(mesh, bax)),
+                out_shardings=(ns(mesh, bax, "model"), cache_sh),
+                donate_argnums=(1,),
+                model_flops=2.0 * c.active_param_count() * B,
+                model_bytes=self._traffic("decode", B, S),
+                note=f"decode batch={B}, cache={S} (seq-sharded)",
+            )
+
+    # -- smoke (CPU) ------------------------------------------------------
+    def smoke_model(self) -> TransformerLM:
+        return TransformerLM(self.smoke_cfg)

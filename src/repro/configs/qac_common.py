@@ -1,0 +1,108 @@
+"""The paper's own system as a config: docid-striped QAC serving at eBay scale.
+
+Index sizing mirrors Table 2 EBAY x a production-year growth factor:
+10M completions, 1M unique terms, ~3.1 postings/completion. The index stripes
+over ``model``; request batches shard over (pod, data) — DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .base import Cell, Lowerable, batch_axes, ns, replicated, sds
+from ..core.types import MAX_TERMS, MAX_TERM_CHARS
+from ..core.striped import StripedQACIndex
+from ..core.dictionary import TermDictionary
+from ..core.strings import n_chunks
+from ..serve.qac import qac_serve_striped
+
+QAC_SHAPES = {
+    "serve_online": dict(kind="serve", batch=4_096),
+    "serve_bulk": dict(kind="serve", batch=65_536),
+}
+
+
+@dataclasses.dataclass
+class QACArch:
+    arch_id: str = "qac-ebay"
+    n_completions: int = 10_000_000
+    n_terms: int = 1_000_000
+    postings_per_comp: float = 3.1
+    k: int = 10
+
+    family = "qac"
+
+    def cells(self):
+        return [Cell(self.arch_id, s, spec["kind"])
+                for s, spec in QAC_SHAPES.items()]
+
+    def index_specs(self, n_stripes: int):
+        N, V, M = self.n_completions, self.n_terms, MAX_TERMS
+        n_loc = N // n_stripes
+        p_pad = int(N * self.postings_per_comp / n_stripes * 1.1)
+        p_pad = ((p_pad + 127) // 128) * 128
+        vpad = V + 2
+        n_pad = ((vpad + 127) // 128) * 128
+        nb = n_pad // 128
+        levels = max(1, int(np.ceil(np.log2(nb))) + 1)
+        S = n_stripes
+        striped = StripedQACIndex(
+            postings=sds((S, p_pad), jnp.int32),
+            offsets=sds((S, vpad), jnp.int32),
+            minimal=sds((S, vpad), jnp.int32),
+            fwd_terms=sds((S, n_loc, M), jnp.int32),
+            fwd_nterms=sds((S, n_loc), jnp.int32),
+            rmq_values=sds((S, n_pad), jnp.int32),
+            rmq_st=sds((S, levels, nb), jnp.int32),
+            n_stripes=S, n_terms=V, n_local_docs=n_loc, postings_pad=p_pad,
+            max_terms=M, rmq_levels=levels, rmq_blocks=nb,
+        )
+        C = n_chunks(MAX_TERM_CHARS)
+        dictionary = TermDictionary(
+            chars=sds((V, MAX_TERM_CHARS), jnp.uint8),
+            keys=sds((V, C), jnp.int32),
+            n_terms=V, max_chars=MAX_TERM_CHARS,
+        )
+        return striped, dictionary
+
+    def lowerable(self, shape: str, mesh: Mesh) -> Lowerable:
+        s = QAC_SHAPES[shape]
+        B = s["batch"]
+        S = mesh.shape["model"]
+        bax = batch_axes(mesh)
+        striped_s, dict_s = self.index_specs(S)
+        striped_sh = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P("model")), striped_s)
+        dict_sh = jax.tree_util.tree_map(lambda _: replicated(mesh), dict_s)
+        q_specs = (
+            sds((B, MAX_TERMS), jnp.int32),        # prefix_ids
+            sds((B,), jnp.int32),                  # prefix_len
+            sds((B, MAX_TERM_CHARS), jnp.uint8),   # suffix_chars
+            sds((B,), jnp.int32),                  # suffix_len
+        )
+        q_sh = tuple(ns(mesh, bax, *([None] * (len(x.shape) - 1)))
+                     for x in q_specs)
+        k = self.k
+
+        def fn(striped, dictionary, pids, plen, schars, slen):
+            # §Perf it1 winner: butterfly merge (k·log2(S) vs k·S wire ints)
+            return qac_serve_striped(striped, dictionary, pids, plen, schars,
+                                     slen, k=k, mesh=mesh, merge="butterfly")
+
+        # "model flops": integer comparisons dominate; report probe count
+        probes = B * (MAX_TERMS * 31 + k * 4)
+        # traffic: per query ~2 driver tiles + probe gathers + fwd rows + dict
+        per_q = 2 * 128 * 4 + MAX_TERMS * 31 * 4 + 128 * MAX_TERMS * 4 + 2048
+        mbytes = float(B * per_q)
+        return Lowerable(
+            fn=fn, arg_specs=(striped_s, dict_s) + q_specs,
+            in_shardings=(striped_sh, dict_sh) + q_sh,
+            out_shardings=ns(mesh, bax, None),
+            model_flops=float(probes),
+            model_bytes=mbytes,
+            note=f"striped QAC serve batch={B}, {S} stripes, k={k}",
+        )

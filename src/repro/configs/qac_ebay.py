@@ -1,0 +1,4 @@
+"""qac-ebay: the paper's system at production scale (the 11th config)."""
+from .qac_common import QACArch
+
+ARCH = QACArch(arch_id="qac-ebay")

@@ -1,0 +1,204 @@
+"""RecSys ArchDef: 4 assigned serving/training shapes per arch.
+
+Embedding tables row-shard over ``model`` ("table_rows"); batches shard over
+(pod, data). ``retrieval_cand`` shards the 1M-candidate axis over ``model``
+(MIND scores candidates against interest capsules; other archs score the
+batch-of-candidates through the ranking path — offline bulk semantics).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from .base import Cell, Lowerable, batch_axes, ns, replicated, sds, mesh_wrapped
+from ..models.recsys import (RecsysConfig, FMModel, DINModel, BSTModel,
+                             MINDModel)
+from ..optim.adamw import AdamWConfig
+from ..train.steps import init_train_state, make_recsys_train_step, TrainState
+from ..distributed.sharding import mesh_context
+
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65_536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262_144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_cand=1_048_576),
+}
+
+MODEL_CLS = {"fm": FMModel, "din": DINModel, "bst": BSTModel, "mind": MINDModel}
+
+
+@dataclasses.dataclass
+class RecsysArch:
+    arch_id: str
+    cfg: RecsysConfig
+    smoke_cfg: RecsysConfig
+    sparse_tables: bool = False   # fm: lazy sparse-row AdamW (§Perf)
+
+    family = "recsys"
+
+    def cells(self):
+        return [Cell(self.arch_id, s, spec["kind"])
+                for s, spec in RECSYS_SHAPES.items()]
+
+    def feat_specs(self, batch: int):
+        c = self.cfg
+        if c.kind == "fm":
+            return {"sparse_ids": sds((batch, c.n_sparse), jnp.int32)}
+        f = {
+            "hist_items": sds((batch, c.seq_len), jnp.int32),
+            "hist_mask": sds((batch, c.seq_len), jnp.float32),
+            "target_item": sds((batch,), jnp.int32),
+        }
+        if c.kind == "din":
+            f["hist_cates"] = sds((batch, c.seq_len), jnp.int32)
+            f["target_cate"] = sds((batch,), jnp.int32)
+        return f
+
+    def _flops(self, batch: int) -> float:
+        c = self.cfg
+        d = c.embed_dim
+        if c.kind == "fm":
+            return 2.0 * batch * c.n_sparse * d * 2
+        L = c.seq_len
+        if c.kind == "din":
+            att = L * (8 * d) * 80 + L * 80 * 40
+            mlp = (6 * d) * 200 + 200 * 80
+            return 2.0 * batch * (att + mlp)
+        if c.kind == "bst":
+            blk = c.n_blocks * (4 * (L + 1) * d * d + 2 * (L + 1) ** 2 * d
+                                + 8 * (L + 1) * d * d)
+            mlp = (L + 1) * d * 1024 + 1024 * 512 + 512 * 256
+            return 2.0 * batch * (blk + mlp)
+        # mind: routing iters x (K x L x D) + retrieval handled separately
+        return 2.0 * batch * c.capsule_iters * c.n_interests * L * d * 2
+
+    def _traffic(self, batch: int, train: bool, params_s) -> float:
+        c = self.cfg
+        import numpy as _np
+        pbytes = sum(float(_np.prod(l.shape)) * 4 for l in
+                     jax.tree_util.tree_leaves(params_s))
+        n_rows = batch * (c.n_sparse if c.kind == "fm" else c.seq_len + 1)
+        gather = 2.0 * n_rows * c.embed_dim * 4
+        if train:
+            # dense AdamW touches EVERY table row each step: 34x param bytes.
+            # (The §Perf hillclimb replaces this with sparse updates.)
+            return 34.0 * pbytes + 3 * gather
+        return gather + pbytes * 0.01  # serving reads MLP params only
+
+    def lowerable(self, shape: str, mesh: Mesh) -> Lowerable:
+        s = RECSYS_SHAPES[shape]
+        c = self.cfg
+        cls = MODEL_CLS[c.kind]
+        model = cls(c)
+        bax = batch_axes(mesh)
+        rules = {"batch": bax, "table_rows": "model", "candidates": "model"}
+        with mesh_context(mesh, rules):
+            params_s = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+            axes = model.param_axes(params_s)
+            from ..distributed.sharding import tree_shardings
+            p_sh = tree_shardings(axes, mesh, rules)
+            B = s["batch"]
+            bspec = bax if B % _size(mesh, bax) == 0 else None
+
+            if s["kind"] == "train":
+                state_s = jax.eval_shape(init_train_state, params_s)
+                state_sh = TrainState(
+                    params=p_sh, opt={"mu": p_sh, "nu": p_sh,
+                                      "step": replicated(mesh)}, ef={})
+                feats = self.feat_specs(B)
+                batch_s = {"feats": feats, "labels": sds((B,), jnp.float32)}
+                b_sh = jax.tree_util.tree_map(
+                    lambda v: ns(mesh, bspec, *([None] * (len(v.shape) - 1))),
+                    batch_s)
+                use_sparse = self.sparse_tables and c.kind == "fm"
+                if use_sparse:
+                    from ..train.steps import make_fm_sparse_train_step
+                    step = make_fm_sparse_train_step(
+                        model, AdamWConfig(total_steps=10_000))
+                    # touched-rows traffic: 12x (p/mu/nu gather+scatter) + grads
+                    u = B * c.n_sparse
+                    mbytes = 14.0 * u * c.embed_dim * 4 + 2.0 * u * 4
+                    note = f"train batch={B}, LAZY sparse-row AdamW"
+                else:
+                    step = make_recsys_train_step(
+                        model, AdamWConfig(total_steps=10_000))
+                    mbytes = self._traffic(B, True, params_s)
+                    note = f"train batch={B}, tables row-sharded"
+                met = {"grad_norm": replicated(mesh), "lr": replicated(mesh),
+                       "loss": replicated(mesh)}
+                return Lowerable(
+                    fn=mesh_wrapped(step, mesh, rules),
+                    arg_specs=(state_s, batch_s),
+                    in_shardings=(state_sh, b_sh), out_shardings=(state_sh, met),
+                    donate_argnums=(0,),
+                    model_flops=3.0 * self._flops(B),  # fwd + bwd ~ 3x fwd
+                    model_bytes=mbytes,
+                    note=note,
+                )
+
+            if s["kind"] == "serve":
+                feats = self.feat_specs(B)
+                f_sh = jax.tree_util.tree_map(
+                    lambda v: ns(mesh, bspec, *([None] * (len(v.shape) - 1))),
+                    feats)
+
+                def fn(params, f):
+                    return model.forward(params, f)
+
+                return Lowerable(
+                    fn=mesh_wrapped(fn, mesh, rules),
+                    arg_specs=(params_s, feats),
+                    in_shardings=(p_sh, f_sh),
+                    out_shardings=ns(mesh, bspec),
+                    model_flops=self._flops(B),
+                    model_bytes=self._traffic(B, False, params_s),
+                    note=f"serve batch={B}",
+                )
+
+            # retrieval
+            NC = s["n_cand"]
+            if c.kind == "mind":
+                feats = self.feat_specs(s["batch"])
+                f_sh = jax.tree_util.tree_map(
+                    lambda v: ns(mesh, *([None] * len(v.shape))), feats)
+                cand = sds((NC, c.embed_dim), jnp.float32)
+
+                def fn(params, f, ce):
+                    return model.retrieve(params, f, ce, k=100)
+
+                return Lowerable(
+                    fn=mesh_wrapped(fn, mesh, rules),
+                    arg_specs=(params_s, feats, cand),
+                    in_shardings=(p_sh, f_sh, ns(mesh, "model", None)),
+                    out_shardings=[ns(mesh, None, None), ns(mesh, None, None)],
+                    model_flops=2.0 * NC * c.n_interests * c.embed_dim,
+                    model_bytes=2.0 * NC * c.embed_dim * 4,
+                    note=f"retrieval 1x{NC} candidates (model-sharded)",
+                )
+            # other archs: offline scoring of NC candidates (bulk ranking)
+            feats = self.feat_specs(NC)
+            f_sh = jax.tree_util.tree_map(
+                lambda v: ns(mesh, bax, *([None] * (len(v.shape) - 1))), feats)
+
+            def fn(params, f):
+                return model.forward(params, f)
+
+            return Lowerable(
+                fn=mesh_wrapped(fn, mesh, rules),
+                arg_specs=(params_s, feats),
+                in_shardings=(p_sh, f_sh), out_shardings=ns(mesh, bax),
+                model_flops=self._flops(NC),
+                model_bytes=self._traffic(NC, False, params_s),
+                note=f"retrieval-as-bulk-ranking {NC} candidates",
+            )
+
+
+def _size(mesh, axes):
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return max(out, 1)

@@ -1,0 +1,21 @@
+"""The paper's contribution: succinct-structure QAC retrieval, TPU-native."""
+from .types import PAD_TERM, INF_DOCID, MAX_TERMS, MAX_TERM_CHARS  # noqa: F401
+from .dictionary import TermDictionary  # noqa: F401
+from .fc import FrontCodedStore  # noqa: F401
+from .completions import Completions  # noqa: F401
+from .rmq import RangeMin, topk_in_range  # noqa: F401
+from .inverted_index import InvertedIndex  # noqa: F401
+from .search import (  # noqa: F401
+    prefix_search_topk,
+    conjunctive_multi,
+    single_term_topk,
+    complete_conjunctive,
+)
+from .builder import (  # noqa: F401
+    QACIndex,
+    build_qac_index,
+    build_corpus,
+    parse_queries,
+    corpus_stats,
+)
+from .ref_engines import HostIndex  # noqa: F401

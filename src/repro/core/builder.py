@@ -1,0 +1,156 @@
+"""Corpus -> QACIndex: ties every structure of paper §3.2 together."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from .types import MAX_TERMS, MAX_TERM_CHARS, pytree_dataclass
+from .dictionary import TermDictionary
+from .fc import FrontCodedStore
+from .completions import Completions
+from .inverted_index import InvertedIndex
+from .rmq import RangeMin
+from .strings import encode_strings
+
+
+@pytree_dataclass(meta_fields=("k_default",))
+class QACIndex:
+    dictionary: TermDictionary
+    completions: Completions
+    index: InvertedIndex
+    rmq_docids: RangeMin        # over completions.docids (prefix-search top-k)
+    rmq_minimal: RangeMin       # over index.minimal (single-term queries)
+    k_default: int
+
+
+@dataclasses.dataclass
+class CorpusStats:
+    n_queries: int
+    n_unique_terms: int
+    avg_chars_per_term: float
+    avg_queries_per_term: float
+    avg_terms_per_query: float
+    uncompressed_bytes: int
+
+
+def tokenize(s: str) -> list[str]:
+    return [t for t in s.strip().split() if t]
+
+
+def build_corpus(queries: Sequence[str], scores: Sequence[float],
+                 max_terms: int = MAX_TERMS,
+                 max_term_chars: int = MAX_TERM_CHARS):
+    """Dedup + tokenize a scored query log (host side).
+
+    Returns (dictionary, term_rows int32[N,M], scores float64[N], kept_strings).
+    """
+    seen = {}
+    for q, s in zip(queries, scores):
+        toks = tokenize(q)
+        if not toks or len(toks) > max_terms:
+            continue
+        key = " ".join(toks)
+        seen[key] = max(seen.get(key, -np.inf), float(s))
+    kept = sorted(seen.keys())
+    sc = np.asarray([seen[kq] for kq in kept], dtype=np.float64)
+    vocab = sorted({t for q in kept for t in tokenize(q)})
+    dictionary = TermDictionary.build(vocab, max_term_chars)
+    tid = {t: i + 1 for i, t in enumerate(vocab)}  # 1-based lexicographic ids
+    rows = np.zeros((len(kept), max_terms), dtype=np.int32)
+    for i, q in enumerate(kept):
+        for j, t in enumerate(tokenize(q)):
+            rows[i, j] = tid[t]
+    return dictionary, rows, sc, kept
+
+
+def build_qac_index(queries: Sequence[str], scores: Sequence[float],
+                    k_default: int = 10,
+                    max_terms: int = MAX_TERMS,
+                    max_term_chars: int = MAX_TERM_CHARS):
+    """Full pipeline: scored log -> all paper data structures."""
+    dictionary, rows, sc, kept = build_corpus(
+        queries, scores, max_terms, max_term_chars
+    )
+    comps = Completions.build(rows, sc)
+    # row -> docid mapping on host for the index builder
+    order = np.lexsort(
+        tuple(rows[:, j] for j in range(rows.shape[1] - 1, -1, -1)) + (-sc,)
+    )
+    d_of_row = np.empty(len(rows), dtype=np.int32)
+    d_of_row[order] = np.arange(len(rows), dtype=np.int32)
+    inv = InvertedIndex.build(rows, d_of_row, dictionary.n_terms)
+    rmq_doc = RangeMin.build(np.asarray(comps.docids))
+    rmq_min = inv.build_minimal_rmq()
+    qidx = QACIndex(
+        dictionary=dictionary,
+        completions=comps,
+        index=inv,
+        rmq_docids=rmq_doc,
+        rmq_minimal=rmq_min,
+        k_default=k_default,
+    )
+    return qidx, kept, sc
+
+
+def corpus_stats(kept: Sequence[str]) -> CorpusStats:
+    terms = [t for q in kept for t in tokenize(q)]
+    uniq = set(terms)
+    return CorpusStats(
+        n_queries=len(kept),
+        n_unique_terms=len(uniq),
+        avg_chars_per_term=float(np.mean([len(t) for t in uniq])) if uniq else 0.0,
+        avg_queries_per_term=len(terms) / max(len(uniq), 1),
+        avg_terms_per_query=len(terms) / max(len(kept), 1),
+        uncompressed_bytes=sum(len(q) + 1 for q in kept),
+    )
+
+
+def parse_queries(dictionary: TermDictionary, raw_queries: Sequence[str],
+                  max_terms: int = MAX_TERMS,
+                  max_term_chars: int = MAX_TERM_CHARS):
+    """Paper §3.1 "Parsing": split each raw query into prefix term-ids and a
+    (possibly incomplete) suffix. Host-side; returns device-ready arrays.
+
+    A trailing space means the last term is complete -> it joins the prefix
+    and the suffix is empty (matches any term).
+    """
+    B = len(raw_queries)
+    prefix_ids = np.zeros((B, max_terms), dtype=np.int32)
+    prefix_len = np.zeros(B, dtype=np.int32)
+    prefix_ok = np.ones(B, dtype=bool)
+    suffix = np.zeros((B, max_term_chars), dtype=np.uint8)
+    suffix_len = np.zeros(B, dtype=np.int32)
+    all_terms = []
+    for q in raw_queries:
+        toks = tokenize(q)
+        ends_complete = q.endswith(" ") or q.endswith("\t")
+        pre = toks if ends_complete else toks[:-1]
+        all_terms.append((pre, "" if ends_complete or not toks else toks[-1]))
+    flat = [t for pre, _ in all_terms for t in pre]
+    ids = {}
+    if flat:
+        uniq = sorted(set(flat))
+        chars = encode_strings(uniq, max_term_chars)
+        got = np.asarray(dictionary.locate(jnp.asarray(chars)))
+        ids = dict(zip(uniq, got.tolist()))
+    for i, (pre, suf) in enumerate(all_terms):
+        pre = pre[: max_terms - 1]
+        for j, t in enumerate(pre):
+            tid = ids.get(t, 0)
+            prefix_ids[i, j] = tid
+            if tid == 0:
+                prefix_ok[i] = False
+        prefix_len[i] = len(pre)
+        b = suf.encode("utf-8")[:max_term_chars]
+        suffix[i, : len(b)] = np.frombuffer(b, dtype=np.uint8)
+        suffix_len[i] = len(b)
+    return (
+        jnp.asarray(prefix_ids),
+        jnp.asarray(prefix_len),
+        np.asarray(prefix_ok),
+        jnp.asarray(suffix),
+        jnp.asarray(suffix_len),
+    )

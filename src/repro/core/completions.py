@@ -1,0 +1,97 @@
+"""Completions as integer (multi-)sets + the docids map (paper §3.2).
+
+TPU adaptation (DESIGN.md §2): the integer trie becomes a *columnar* sorted
+term matrix. Descending one trie level == one range-restricted binary search in
+a sorted column, so LocatePrefix(prefix, [l,r]) is ``len(prefix)+1`` fixed-depth
+binary searches — no pointers, fully batchable. The forward index (docid ->
+term set) is the same matrix indexed by docid, used by conjunctive forward
+search and Reporting.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .types import MAX_TERMS, INF_DOCID, pytree_dataclass
+from .searching import ranged_searchsorted
+
+
+@pytree_dataclass(meta_fields=("n", "max_terms"))
+class Completions:
+    cols: jnp.ndarray       # int32[M, N]: column j = j-th term of each lex-sorted completion
+    docids: jnp.ndarray     # int32[N]: lex position -> docid (score rank, 0 = best)
+    fwd_terms: jnp.ndarray  # int32[N, M]: docid -> term ids (the forward index)
+    n_terms_per: jnp.ndarray  # int32[N]: docid -> number of terms
+    n: int
+    max_terms: int
+
+    # -- construction (host) -------------------------------------------------
+    @staticmethod
+    def build(term_rows: np.ndarray, scores: np.ndarray) -> "Completions":
+        """term_rows: int32[N, M] 1-based term ids (0 pad), one row per completion.
+
+        ``scores`` (higher = better) define docids: docid = rank under
+        (-score, lexicographic row) — the paper's decreasing-score assignment
+        with lexicographic tie-break.
+        """
+        term_rows = np.asarray(term_rows, dtype=np.int32)
+        n, m = term_rows.shape
+        # score rank (docid): sort by (-score, row lex)
+        order = np.lexsort(tuple(term_rows[:, j] for j in range(m - 1, -1, -1)) + (-scores,))
+        docid_of_row = np.empty(n, dtype=np.int32)
+        docid_of_row[order] = np.arange(n, dtype=np.int32)
+        # lexicographic order of completions
+        lex = np.lexsort(tuple(term_rows[:, j] for j in range(m - 1, -1, -1)))
+        cols = term_rows[lex].T.copy()                      # [M, N]
+        docids = docid_of_row[lex].copy()                   # [N]
+        fwd = np.zeros_like(term_rows)
+        fwd[docid_of_row] = term_rows                       # docid -> terms
+        nt = (term_rows != 0).sum(axis=1).astype(np.int32)
+        nterms = np.zeros(n, dtype=np.int32)
+        nterms[docid_of_row] = nt
+        return Completions(
+            cols=jnp.asarray(cols),
+            docids=jnp.asarray(docids),
+            fwd_terms=jnp.asarray(fwd),
+            n_terms_per=jnp.asarray(nterms),
+            n=n,
+            max_terms=m,
+        )
+
+    # -- queries --------------------------------------------------------------
+    def locate_prefix(self, prefix_ids, prefix_len, term_lo, term_hi):
+        """Lexicographic range [p, q) of completions prefixed by
+        prefix_ids[:prefix_len] followed by any term id in [term_lo, term_hi).
+
+        All args are per-query scalars; vmap for batches. Empty -> p == q.
+        """
+        lo = jnp.int32(0)
+        hi = jnp.int32(self.n)
+        for j in range(self.max_terms):          # static unroll: trie descent
+            active = j < prefix_len
+            t = prefix_ids[j]
+            nlo = ranged_searchsorted(self.cols[j], t, lo, hi, side="left")
+            nhi = ranged_searchsorted(self.cols[j], t, lo, hi, side="right")
+            lo = jnp.where(active, nlo, lo)
+            hi = jnp.where(active, nhi, hi)
+        # final level: any term in [term_lo, term_hi)
+        col = self.cols[jnp.minimum(prefix_len, self.max_terms - 1)]
+        p = ranged_searchsorted(col, term_lo, lo, hi, side="left")
+        q = ranged_searchsorted(col, term_hi, lo, hi, side="left")
+        ok = prefix_len < self.max_terms
+        return jnp.where(ok, p, 0), jnp.where(ok, q, 0)
+
+    def extract(self, docid):
+        """docid -> (term_ids int32[M], n_terms). INF/invalid -> zeros."""
+        valid = (docid >= 0) & (docid < self.n)
+        idx = jnp.clip(docid, 0, self.n - 1)
+        row = jnp.where(valid, self.fwd_terms[idx], 0)
+        return row, jnp.where(valid, self.n_terms_per[idx], 0)
+
+    def space_bytes(self) -> int:
+        return int(self.cols.nbytes + self.docids.nbytes)
+
+    def fwd_space_bytes(self) -> int:
+        return int(self.fwd_terms.nbytes + self.n_terms_per.nbytes)

@@ -1,0 +1,183 @@
+"""Two-level Front Coding string store (paper §3.2, Table 3).
+
+Bucket layout follows the paper: every (B+1)-th string is an uncompressed
+*header*; the B strings after it store (lcp, suffix) relative to their
+predecessor. Space accounting matches a byte-oriented FC encoding (1-2 byte
+lcp/len + suffix bytes).
+
+TPU adaptation of decode (DESIGN.md §2): reconstructing string ``p`` of a
+bucket needs, for every char position j, the *last* predecessor q <= p whose
+lcp <= j — a masked argmax over the (B+1, T) bucket, one vector op, instead of
+the sequential C++ scan. Extract / Locate / LocatePrefix are all batched.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .types import pytree_dataclass
+from .strings import encode_strings, pack_chars, prefix_bound_keys
+from .searching import ranged_searchsorted_keys, _lex_lt
+
+
+def _lcp(a: bytes, b: bytes) -> int:
+    m = min(len(a), len(b))
+    for i in range(m):
+        if a[i] != b[i]:
+            return i
+    return m
+
+
+@pytree_dataclass(meta_fields=("n_strings", "bucket_size", "max_chars", "n_buckets"))
+class FrontCodedStore:
+    header_chars: jnp.ndarray   # uint8[NB, T]
+    header_keys: jnp.ndarray    # int32[NB, C]
+    lcps: jnp.ndarray           # int32[NB, B+1] (col 0 == 0 for the header)
+    slens: jnp.ndarray          # int32[NB, B+1] (suffix lengths)
+    suf_off: jnp.ndarray        # int32[NB, B+1] offsets into suffix_chars
+    suffix_chars: jnp.ndarray   # uint8[total_suffix]
+    n_strings: int
+    bucket_size: int
+    max_chars: int
+    n_buckets: int
+
+    # -- construction -------------------------------------------------------
+    @staticmethod
+    def build(strings_sorted, bucket_size: int = 16, max_chars: int = 64):
+        B = bucket_size
+        enc = [
+            (s.encode("utf-8")[:max_chars] if isinstance(s, str) else bytes(s)[:max_chars])
+            for s in strings_sorted
+        ]
+        n = len(enc)
+        nb = (n + B) // (B + 1)
+        headers, lcps, slens, offs, chunks = [], [], [], [], []
+        total = 0
+        for b in range(nb):
+            base = b * (B + 1)
+            group = enc[base : base + B + 1]
+            headers.append(group[0])
+            row_l, row_s, row_o = [0], [len(group[0])], [total]
+            chunks.append(group[0])
+            total += len(group[0])
+            for prev, cur in zip(group, group[1:]):
+                l = _lcp(prev, cur)
+                row_l.append(l)
+                row_s.append(len(cur) - l)
+                row_o.append(total)
+                chunks.append(cur[l:])
+                total += len(cur) - l
+            while len(row_l) < B + 1:  # pad short last bucket
+                row_l.append(0)
+                row_s.append(0)
+                row_o.append(total)
+            lcps.append(row_l)
+            slens.append(row_s)
+            offs.append(row_o)
+        hdr = encode_strings(headers, max_chars)
+        suffix = np.frombuffer(b"".join(chunks), dtype=np.uint8).copy()
+        if suffix.size == 0:
+            suffix = np.zeros(1, dtype=np.uint8)
+        return FrontCodedStore(
+            header_chars=jnp.asarray(hdr),
+            header_keys=jnp.asarray(pack_chars(hdr)),
+            lcps=jnp.asarray(np.asarray(lcps, dtype=np.int32)),
+            slens=jnp.asarray(np.asarray(slens, dtype=np.int32)),
+            suf_off=jnp.asarray(np.asarray(offs, dtype=np.int32)),
+            suffix_chars=jnp.asarray(suffix),
+            n_strings=n,
+            bucket_size=B,
+            max_chars=max_chars,
+            n_buckets=nb,
+        )
+
+    # -- decode --------------------------------------------------------------
+    def _decode_bucket(self, b: jnp.ndarray) -> jnp.ndarray:
+        """Decode all B+1 strings of bucket b -> uint8[B+1, T]."""
+        Bp1 = self.bucket_size + 1
+        T = self.max_chars
+        lcp = self.lcps[b]                      # [B+1]
+        slen = self.slens[b]
+        off = self.suf_off[b]
+        j = jnp.arange(T, dtype=jnp.int32)      # char positions
+        q = jnp.arange(Bp1, dtype=jnp.int32)    # in-bucket string index
+        #   writer[q, j] == True where string q wrote char j
+        writer = lcp[:, None] <= j[None, :]                       # [B+1, T]
+        # for target p: last q <= p with writer[q, j]
+        #   q_star[p, j] = max over q<=p of q * writer  (−1 if none; header q=0
+        #   has lcp 0 so there is always one)
+        w = jnp.where(writer, q[:, None], -1)                     # [B+1, T]
+        q_star = jax.lax.cummax(w, axis=0)                        # [B+1, T]
+        qs = jnp.maximum(q_star, 0)
+        char_pos = off[qs] + (j[None, :] - lcp[qs])               # [B+1, T]
+        ch = self.suffix_chars[jnp.clip(char_pos, 0, self.suffix_chars.shape[0] - 1)]
+        lengths = lcp + slen                                      # [B+1]
+        valid = (j[None, :] < lengths[qs]) & (j[None, :] < (lcp[qs] + slen[qs]))
+        return jnp.where(valid, ch, 0).astype(jnp.uint8)
+
+    def extract(self, ids: jnp.ndarray) -> jnp.ndarray:
+        """ids[B] 0-based ranks -> uint8[B, T]."""
+        Bp1 = self.bucket_size + 1
+
+        def one(i):
+            b = i // Bp1
+            within = i % Bp1
+            return self._decode_bucket(b)[within]
+
+        return jax.vmap(one)(jnp.clip(ids, 0, self.n_strings - 1))
+
+    # -- searches ------------------------------------------------------------
+    def _bucket_of_key(self, key: jnp.ndarray, side: str) -> jnp.ndarray:
+        z = jnp.int32(0)
+        nb = jnp.int32(self.n_buckets)
+        pos = ranged_searchsorted_keys(self.header_keys, key, z, nb, side=side)
+        return jnp.maximum(pos - 1, 0)
+
+    def _rank_of_key(self, key: jnp.ndarray, side: str) -> jnp.ndarray:
+        """Global insertion rank of a packed key among all strings."""
+        Bp1 = self.bucket_size + 1
+        b = self._bucket_of_key(key, side)
+        bucket = self._decode_bucket(b)                   # [B+1, T]
+        bkeys = pack_chars(bucket)
+        in_bucket = ranged_searchsorted_keys(
+            bkeys, key, jnp.int32(0), jnp.int32(Bp1), side=side
+        )
+        return jnp.minimum(b * Bp1 + in_bucket, self.n_strings)
+
+    def locate(self, q_chars: jnp.ndarray) -> jnp.ndarray:
+        """uint8[B, T] -> 0-based rank, -1 if absent."""
+        keys = pack_chars(q_chars)
+
+        def one(k, qc):
+            pos = self._rank_of_key(k, "left")
+            row = self.extract(pos[None])[0]
+            hit = (pos < self.n_strings) & jnp.all(row == qc)
+            return jnp.where(hit, pos, -1).astype(jnp.int32)
+
+        return jax.vmap(one)(keys, q_chars)
+
+    def locate_prefix(self, q_chars: jnp.ndarray, q_len: jnp.ndarray):
+        """-> (l, r) half-open 0-based rank range of strings with the prefix."""
+        lo_keys, hi_keys = prefix_bound_keys(q_chars, q_len, self.max_chars)
+
+        def one(lk, hk):
+            return self._rank_of_key(lk, "left"), self._rank_of_key(hk, "right")
+
+        return jax.vmap(one)(lo_keys, hi_keys)
+
+    # -- space accounting (paper-style encoded size) -------------------------
+    def encoded_bytes(self) -> int:
+        """Byte-oriented FC size: headers + (lcp,len) bytes + suffix bytes."""
+        lcp = np.asarray(self.lcps)
+        slen = np.asarray(self.slens)
+        hdr_lens = (np.asarray(self.header_chars) != 0).sum()
+        meta = int((lcp.size - self.n_buckets) * 2)  # 1B lcp + 1B len per string
+        return int(hdr_lens + meta + int(np.asarray(self.suffix_chars).shape[0]))
+
+    def space_bytes(self) -> int:
+        """In-memory (TPU array) footprint."""
+        return int(
+            self.header_chars.nbytes + self.header_keys.nbytes + self.lcps.nbytes
+            + self.slens.nbytes + self.suf_off.nbytes + self.suffix_chars.nbytes
+        )

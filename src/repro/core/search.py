@@ -1,0 +1,211 @@
+"""QAC search engines (paper §3.1, §3.3) — batched TPU formulations.
+
+Three device-side engines:
+
+  * ``prefix_search_topk``   — Fig 1a: trie-descent LocatePrefix + RMQ top-k.
+  * ``conjunctive_multi``    — Fig 5 (Fwd): intersection of prefix posting
+    lists iterated in docid (= score) order, forward-index range check, first-k
+    compaction. The intersection is probe-based (each candidate lane binary-
+    searches the other lists) — the SIMD替 of NextGeq iterator merging.
+  * ``single_term_topk``     — paper §3.3 "Single-Term Queries": RMQ over the
+    ``minimal`` array with lazily instantiated list iterators, as a dense-slot
+    loop (no heap). Single-term queries are the most frequent in production.
+
+All functions are per-query; ``jax.vmap`` them for batches (see serve/qac.py).
+Results are docids, ascending == best-score-first; INF_DOCID pads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .types import INF_DOCID
+from .searching import ranged_searchsorted
+from .rmq import RangeMin, topk_in_range
+from .completions import Completions
+from .inverted_index import InvertedIndex
+from .dictionary import TermDictionary
+
+
+# --------------------------------------------------------------------------
+# prefix-search (Fig 1a)
+# --------------------------------------------------------------------------
+def prefix_search_topk(completions: Completions, rmq_docids: RangeMin,
+                       prefix_ids, prefix_len, term_lo, term_hi, k: int):
+    """Top-k docids of completions prefixed by prefix + suffix-range."""
+    p, q = completions.locate_prefix(prefix_ids, prefix_len, term_lo, term_hi)
+    vals, _ = topk_in_range(rmq_docids, p, q, k)
+    bad = term_lo >= term_hi
+    return jnp.where(bad, INF_DOCID, vals)
+
+
+# --------------------------------------------------------------------------
+# conjunctive-search, multi-term (Fig 5: forward / Fwd engine)
+# --------------------------------------------------------------------------
+def conjunctive_multi(index: InvertedIndex, completions, prefix_ids,
+                      prefix_len, term_lo, term_hi, k: int,
+                      *, tile: int = 128, max_tiles: int = 4096):
+    """Per-query conjunctive search with >= 1 prefix terms.
+
+    prefix_ids: int32[PMAX] 1-based (0 pad); term range [term_lo, term_hi).
+    Iterates the shortest prefix list in ``tile``-wide chunks; each lane
+    checks membership in the other lists (binary-search probes) and the
+    forward-index range test, then first-k hits are compacted in docid order.
+
+    ``completions`` is either a Completions or any object with an
+    ``extract(docid) -> (terms[M], n)`` method (e.g. a stripe-local forward
+    index for the distributed path).
+    """
+    PMAX = prefix_ids.shape[0]
+    valid_t = jnp.arange(PMAX) < prefix_len
+    lens = jax.vmap(index.list_len)(prefix_ids)
+    lens = jnp.where(valid_t, lens, jnp.iinfo(jnp.int32).max)
+    driver = jnp.argmin(lens)                       # slot of shortest list
+    d_start, d_end = index.list_bounds(prefix_ids[driver])
+    d_len = d_end - d_start
+
+    n_post = index.postings.shape[0]
+    lane = jnp.arange(tile, dtype=jnp.int32)
+
+    starts, ends = jax.vmap(index.list_bounds)(prefix_ids)  # [PMAX]
+
+    def cond(state):
+        t, found, _ = state
+        return (t * tile < d_len) & (found < k) & (t < max_tiles)
+
+    def body(state):
+        t, found, res = state
+        base = d_start + t * tile
+        idx = jnp.minimum(base + lane, n_post - 1)
+        cand = index.postings[idx]                              # [T]
+        in_list = (base + lane) < d_end
+        # membership probes into every other prefix list
+        member = jnp.ones((tile,), bool)
+        for j in range(PMAX):
+            need = (j < prefix_len) & (j != driver)
+            pos = jax.vmap(
+                lambda v: ranged_searchsorted(index.postings, v, starts[j], ends[j], side="left")
+            )(cand)
+            hit = (pos < ends[j]) & (index.postings[jnp.minimum(pos, n_post - 1)] == cand)
+            member &= jnp.where(need, hit, True)
+        # forward-index suffix-range check (Fig 5 line 6)
+        rows, _ = jax.vmap(completions.extract)(cand)           # [T, M]
+        fwd_ok = jnp.any((rows >= term_lo) & (rows < term_hi), axis=1)
+        hits = in_list & member & fwd_ok
+        # first-k compaction in docid order
+        pos_out = found + jnp.cumsum(hits.astype(jnp.int32)) - 1
+        write = hits & (pos_out < k)
+        res = res.at[jnp.where(write, pos_out, k)].set(
+            jnp.where(write, cand, res[jnp.minimum(pos_out, k)]), mode="drop"
+        )
+        found = jnp.minimum(found + hits.sum(dtype=jnp.int32), k)
+        return t + 1, found, res
+
+    res0 = jnp.full((k + 1,), INF_DOCID, jnp.int32)
+    _, _, res = lax.while_loop(cond, body, (jnp.int32(0), jnp.int32(0), res0))
+    bad = (term_lo >= term_hi) | (prefix_len <= 0) | jnp.any(jnp.where(valid_t, prefix_ids == 0, False))
+    return jnp.where(bad, INF_DOCID, res[:k])
+
+
+# --------------------------------------------------------------------------
+# conjunctive-search, single term (paper §3.3, RMQ over `minimal`)
+# --------------------------------------------------------------------------
+def single_term_topk(index: InvertedIndex, rmq_minimal: RangeMin,
+                     term_lo, term_hi, k: int):
+    """Top-k docids in the union of lists of terms in [term_lo, term_hi).
+
+    Dense-slot version of the paper's lazy-iterator heap: a slot is either a
+    `minimal`-range (kind 0) or a posting-list iterator (kind 1). An iterator
+    is instantiated only when its list's minimum is popped — the paper's key
+    saving. Runs 2k iterations with consecutive-duplicate suppression (a docid
+    may appear in several lists of the range).
+    """
+    iters = 2 * k
+    cap = 2 * iters + 1
+    hi_incl = term_hi - 1
+
+    pos0, val0 = rmq_minimal.query(term_lo, hi_incl)
+    kind = jnp.zeros((cap,), jnp.int32)
+    lo_a = jnp.zeros((cap,), jnp.int32).at[0].set(term_lo)
+    hi_a = jnp.full((cap,), -1, jnp.int32).at[0].set(hi_incl)
+    pos_a = jnp.zeros((cap,), jnp.int32).at[0].set(pos0)     # range: argmin term; iter: ptr
+    val_a = jnp.full((cap,), INF_DOCID, jnp.int32).at[0].set(
+        jnp.where(term_lo <= hi_incl, val0, INF_DOCID)
+    )
+    out = jnp.full((k,), INF_DOCID, jnp.int32)
+
+    def body(i, state):
+        kind, lo_a, hi_a, pos_a, val_a, out, n_out, nf, prev = state
+        best = jnp.argmin(val_a)
+        bval = val_a[best]
+        found = bval < INF_DOCID
+        is_range = kind[best] == 0
+        # ---- emit (dedup against previous emission) ----
+        emit = found & (bval != prev)
+        out = out.at[jnp.where(emit, n_out, k)].set(bval, mode="drop")
+        n_out = n_out + emit.astype(jnp.int32)
+        prev = jnp.where(found, bval, prev)
+        # ---- range pop: split + instantiate iterator ----
+        tstar = pos_a[best]                                   # term with the min
+        lo, hi = lo_a[best], hi_a[best]
+        lpos, lval = rmq_minimal.query(lo, tstar - 1)
+        lval = jnp.where((lo <= tstar - 1) & found & is_range, lval, INF_DOCID)
+        rpos, rval = rmq_minimal.query(tstar + 1, hi)
+        rval = jnp.where((tstar + 1 <= hi) & found & is_range, rval, INF_DOCID)
+        it_start, it_end = index.list_bounds(tstar)
+        it_ptr = it_start + 1                                  # minimal was postings[start]
+        it_val = jnp.where(
+            (it_ptr < it_end) & found & is_range,
+            index.postings[jnp.minimum(it_ptr, index.postings.shape[0] - 1)],
+            INF_DOCID,
+        )
+        # ---- iterator pop: advance ----
+        adv_ptr = pos_a[best] + 1
+        _, adv_end = index.list_bounds(lo_a[best])             # iterator stores term in lo_a
+        adv_val = jnp.where(
+            (adv_ptr < adv_end) & found & (~is_range),
+            index.postings[jnp.minimum(adv_ptr, index.postings.shape[0] - 1)],
+            INF_DOCID,
+        )
+        # ---- write popped slot ----
+        kind = kind.at[best].set(jnp.where(is_range, 0, 1))
+        lo_a = lo_a.at[best].set(jnp.where(is_range, lo, lo_a[best]))
+        hi_a = hi_a.at[best].set(jnp.where(is_range, tstar - 1, hi_a[best]))
+        pos_a = pos_a.at[best].set(jnp.where(is_range, lpos, adv_ptr))
+        val_a = val_a.at[best].set(jnp.where(is_range, lval, adv_val))
+        # ---- two fresh slots (inactive unless a range was popped) ----
+        live = found & is_range
+        kind = kind.at[nf].set(0)
+        lo_a = lo_a.at[nf].set(tstar + 1)
+        hi_a = hi_a.at[nf].set(hi)
+        pos_a = pos_a.at[nf].set(rpos)
+        val_a = val_a.at[nf].set(jnp.where(live, rval, INF_DOCID))
+        kind = kind.at[nf + 1].set(1)
+        lo_a = lo_a.at[nf + 1].set(tstar)                      # iterator: term id here
+        hi_a = hi_a.at[nf + 1].set(-1)
+        pos_a = pos_a.at[nf + 1].set(it_ptr)
+        val_a = val_a.at[nf + 1].set(jnp.where(live, it_val, INF_DOCID))
+        return kind, lo_a, hi_a, pos_a, val_a, out, n_out, nf + 2, prev
+
+    state = (kind, lo_a, hi_a, pos_a, val_a, out, jnp.int32(0), jnp.int32(1),
+             jnp.int32(-1))
+    state = lax.fori_loop(0, iters, body, state)
+    out = state[5]
+    bad = term_lo >= term_hi
+    return jnp.where(bad, INF_DOCID, out)
+
+
+# --------------------------------------------------------------------------
+# full Complete() (Fig 1b) for a parsed query — used by serve/qac.py
+# --------------------------------------------------------------------------
+def complete_conjunctive(index, completions, rmq_minimal,
+                         prefix_ids, prefix_len, term_lo, term_hi, k: int,
+                         **kw):
+    """Route multi-term vs single-term per query (branchless select)."""
+    multi = conjunctive_multi(index, completions, prefix_ids, prefix_len,
+                              term_lo, term_hi, k, **kw)
+    single = single_term_topk(index, rmq_minimal, term_lo, term_hi, k)
+    return jnp.where(prefix_len > 0, multi, single)

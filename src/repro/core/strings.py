@@ -1,0 +1,69 @@
+"""Byte-string <-> packed int32 chunk-key conversion.
+
+TPU adaptation of string comparison (DESIGN.md §2): strings are padded uint8
+rows; for *sorted* search we pack 3 bytes per int32 chunk (big-endian within the
+chunk) so that chunkwise signed-integer comparison equals lexicographic byte
+comparison, and every chunk stays non-negative even for 0xFF padding.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .types import CHARS_PER_CHUNK
+
+
+def n_chunks(max_chars: int) -> int:
+    return (max_chars + CHARS_PER_CHUNK - 1) // CHARS_PER_CHUNK
+
+
+def encode_strings(strings, max_chars: int) -> np.ndarray:
+    """List of bytes/str -> uint8[N, max_chars] padded with 0 (host-side)."""
+    out = np.zeros((len(strings), max_chars), dtype=np.uint8)
+    for i, s in enumerate(strings):
+        b = s.encode("utf-8") if isinstance(s, str) else bytes(s)
+        b = b[:max_chars]
+        out[i, : len(b)] = np.frombuffer(b, dtype=np.uint8)
+    return out
+
+
+def decode_string(row: np.ndarray) -> str:
+    row = np.asarray(row, dtype=np.uint8)
+    end = int(np.argmax(row == 0)) if (row == 0).any() else len(row)
+    return bytes(row[:end]).decode("utf-8", errors="replace")
+
+
+def pack_chars(chars):
+    """uint8[..., T] -> int32[..., ceil(T/3)] big-endian 3-byte chunks.
+
+    Works on numpy or jax arrays (pure ufunc ops).
+    """
+    import jax.numpy as jnp
+
+    xp = jnp if not isinstance(chars, np.ndarray) else np
+    T = chars.shape[-1]
+    pad = (-T) % CHARS_PER_CHUNK
+    if pad:
+        chars = xp.concatenate(
+            [chars, xp.zeros(chars.shape[:-1] + (pad,), dtype=chars.dtype)], axis=-1
+        )
+    c = chars.astype(xp.int32).reshape(chars.shape[:-1] + (-1, CHARS_PER_CHUNK))
+    return (c[..., 0] << 16) | (c[..., 1] << 8) | c[..., 2]
+
+
+def prefix_bound_keys(chars, length, max_chars: int):
+    """Packed keys for the lower/upper bound of a prefix search.
+
+    chars: uint8[..., T] prefix padded with 0; length: int32[...]. Returns
+    (lo_key, hi_key): positions >= length are 0x00 in lo_key and 0xFF in hi_key,
+    so ``searchsorted(lo,'left') .. searchsorted(hi,'right')`` brackets exactly
+    the strings with that prefix.
+    """
+    import jax.numpy as jnp
+
+    xp = jnp if not isinstance(chars, np.ndarray) else np
+    T = max_chars
+    idx = xp.arange(T, dtype=xp.int32)
+    mask = idx[None, :] < xp.asarray(length).reshape(-1, 1) if chars.ndim > 1 else idx < length
+    lo = xp.where(mask, chars, xp.zeros_like(chars))
+    hi = xp.where(mask, chars, xp.full_like(chars, 255))
+    return pack_chars(lo), pack_chars(hi)

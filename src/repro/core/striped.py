@@ -1,0 +1,124 @@
+"""Docid-striped QAC index for model-axis sharding (DESIGN.md §4).
+
+Stripe s owns docids with ``docid % n_stripes == s``: every stripe sees every
+score band, so stripe-local "first k in docid order" results merge into the
+global top-k with one k-wide all-gather + min-k. All stripe arrays are padded
+to common shapes and stacked on a leading stripe axis, which shard_map splits
+over the ``model`` mesh axis.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .types import INF_DOCID, pytree_dataclass
+from .rmq import RangeMin, BLOCK
+from .inverted_index import InvertedIndex
+
+
+@pytree_dataclass(meta_fields=("n_stripes", "n_terms", "n_local_docs",
+                               "postings_pad", "max_terms", "rmq_levels",
+                               "rmq_blocks"))
+class StripedQACIndex:
+    postings: jnp.ndarray      # int32[S, P_pad] global docids, ascending
+    offsets: jnp.ndarray       # int32[S, V+2]
+    minimal: jnp.ndarray       # int32[S, V+2]
+    fwd_terms: jnp.ndarray     # int32[S, N_loc, M] row = docid // S
+    fwd_nterms: jnp.ndarray    # int32[S, N_loc]
+    rmq_values: jnp.ndarray    # int32[S, n_pad] (padded minimal)
+    rmq_st: jnp.ndarray        # int32[S, levels, nb]
+    n_stripes: int
+    n_terms: int
+    n_local_docs: int
+    postings_pad: int
+    max_terms: int
+    rmq_levels: int
+    rmq_blocks: int
+
+
+class LocalFwd:
+    """Stripe-local forward index exposing the Completions.extract contract."""
+
+    def __init__(self, fwd_terms, fwd_nterms, n_stripes: int):
+        self.fwd_terms = fwd_terms          # [N_loc, M]
+        self.fwd_nterms = fwd_nterms
+        self.n_stripes = n_stripes
+
+    def extract(self, docid):
+        n_loc = self.fwd_terms.shape[0]
+        row_idx = jnp.clip(docid // self.n_stripes, 0, n_loc - 1)
+        valid = (docid >= 0) & (docid < n_loc * self.n_stripes)
+        row = jnp.where(valid, self.fwd_terms[row_idx], 0)
+        return row, jnp.where(valid, self.fwd_nterms[row_idx], 0)
+
+
+def build_striped(term_rows: np.ndarray, docid_of_row: np.ndarray,
+                  n_terms: int, n_stripes: int) -> StripedQACIndex:
+    """Host-side: split the corpus into docid stripes and stack."""
+    term_rows = np.asarray(term_rows, np.int32)
+    docid_of_row = np.asarray(docid_of_row, np.int32)
+    n, m = term_rows.shape
+    n_loc = (n + n_stripes - 1) // n_stripes
+    posts, offs, mins, fwds, fnts, rvals, rsts = [], [], [], [], [], [], []
+    for s in range(n_stripes):
+        keep = (docid_of_row % n_stripes) == s
+        sub_idx = InvertedIndex.build(term_rows[keep], docid_of_row[keep], n_terms)
+        posts.append(np.asarray(sub_idx.postings))
+        offs.append(np.asarray(sub_idx.offsets))
+        mins.append(np.asarray(sub_idx.minimal))
+        fwd = np.zeros((n_loc, m), np.int32)
+        fnt = np.zeros((n_loc,), np.int32)
+        rows_s = term_rows[keep]
+        d_s = docid_of_row[keep] // n_stripes
+        fwd[d_s] = rows_s
+        fnt[d_s] = (rows_s != 0).sum(1)
+        fwds.append(fwd)
+        fnts.append(fnt)
+        rm = RangeMin.build(np.asarray(sub_idx.minimal))
+        rvals.append(np.asarray(rm.values))
+        rsts.append((np.asarray(rm.st_pos), rm.levels, rm.n_blocks))
+    p_pad = max(len(p) for p in posts)
+    posts = [np.pad(p, (0, p_pad - len(p)), constant_values=INF_DOCID) for p in posts]
+    levels = max(st[1] for st in rsts)
+    nb = max(st[2] for st in rsts)
+    sts = []
+    for stp, lv, b in rsts:
+        stp = np.pad(stp, ((0, levels - lv), (0, nb - b)), mode="edge")
+        sts.append(stp)
+    return StripedQACIndex(
+        postings=jnp.asarray(np.stack(posts)),
+        offsets=jnp.asarray(np.stack(offs)),
+        minimal=jnp.asarray(np.stack(mins)),
+        fwd_terms=jnp.asarray(np.stack(fwds)),
+        fwd_nterms=jnp.asarray(np.stack(fnts)),
+        rmq_values=jnp.asarray(np.stack(rvals)),
+        rmq_st=jnp.asarray(np.stack(sts)),
+        n_stripes=n_stripes,
+        n_terms=n_terms,
+        n_local_docs=n_loc,
+        postings_pad=p_pad,
+        max_terms=m,
+        rmq_levels=levels,
+        rmq_blocks=nb,
+    )
+
+
+def local_index(striped: StripedQACIndex):
+    """Inside shard_map (leading stripe dim == 1): reconstruct local views."""
+    idx = InvertedIndex(
+        postings=striped.postings[0],
+        offsets=striped.offsets[0],
+        minimal=striped.minimal[0],
+        n_terms=striped.n_terms,
+        n_postings=striped.postings_pad,
+    )
+    fwd = LocalFwd(striped.fwd_terms[0], striped.fwd_nterms[0], striped.n_stripes)
+    rmq = RangeMin(
+        values=striped.rmq_values[0],
+        st_pos=striped.rmq_st[0],
+        n=striped.minimal.shape[-1],
+        n_blocks=striped.rmq_blocks,
+        levels=striped.rmq_levels,
+    )
+    return idx, fwd, rmq

@@ -1,0 +1,52 @@
+"""Shared constants and pytree helpers for the QAC core.
+
+Conventions (see DESIGN.md §2):
+  * term ids are 1-based; 0 is the PAD term.
+  * docids are 0-based score ranks (0 = best score); INF_DOCID is the sentinel.
+  * all variable-length data is padded to fixed shapes; correctness is masked.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+PAD_TERM = 0
+INF_DOCID = 2**31 - 1          # int32 max: sorts after every real docid
+INVALID = -1                   # invalid id / range marker
+CHARS_PER_CHUNK = 3            # 3 bytes per int32 chunk keeps keys non-negative
+MAX_TERM_CHARS = 24            # padded term length (AOL avg is 14.6)
+MAX_QUERY_CHARS = 96           # padded whole-query length
+MAX_TERMS = 8                  # padded terms per completion (paper: avg ~3)
+
+
+def pytree_dataclass(cls=None, *, meta_fields: tuple = ()):  # noqa: ANN001
+    """Register a frozen dataclass as a JAX pytree.
+
+    ``meta_fields`` are static (hashed into the jit cache key); everything else
+    is a leaf subtree.
+    """
+
+    def wrap(c):
+        c = dataclasses.dataclass(frozen=True)(c)
+        data_fields = tuple(
+            f.name for f in dataclasses.fields(c) if f.name not in meta_fields
+        )
+        jax.tree_util.register_dataclass(
+            c, data_fields=data_fields, meta_fields=tuple(meta_fields)
+        )
+        return c
+
+    if cls is None:
+        return wrap
+    return wrap(cls)
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of all array leaves in a pytree."""
+    return sum(
+        leaf.nbytes
+        for leaf in jax.tree_util.tree_leaves(tree)
+        if hasattr(leaf, "nbytes")
+    )

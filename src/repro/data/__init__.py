@@ -1,0 +1,5 @@
+from .graphs import (  # noqa: F401
+    random_graph, build_csr, neighbor_sample, batch_molecules, synth_positions,
+)
+from .lm import TokenStream, lm_batches  # noqa: F401
+from .recsys_data import recsys_batch  # noqa: F401

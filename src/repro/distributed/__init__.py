@@ -1,0 +1,4 @@
+from .sharding import (  # noqa: F401
+    AxisRules, set_mesh, get_mesh, get_rules, mesh_context,
+    shard_hint, logical_sharding, DEFAULT_LM_RULES,
+)

@@ -1,0 +1,64 @@
+"""Gradient compression for cross-pod reduction: int8 + error feedback.
+
+At 1000+ nodes the pod-interconnect (DCN) all-reduce dominates; int8
+quantization cuts those bytes 4x. Error feedback (Seide et al. '14 / EF-SGD)
+keeps the quantization bias out of the long-run trajectory: the residual of
+each compression round is added back before the next one.
+
+Two entry points:
+  * ``compress``/``decompress`` — pure, testable, used by the simulator;
+  * ``psum_compressed`` — inside shard_map: uniform scale via psum-max, int32
+    summation (exact for <= 2^23 shards), dequant after the wire.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def compress(g, ef=None):
+    """-> (q int8, scale f32, new_ef). Per-tensor symmetric quantization."""
+    g32 = g.astype(jnp.float32)
+    if ef is not None:
+        g32 = g32 + ef
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    new_ef = g32 - q.astype(jnp.float32) * scale
+    return q, scale, new_ef
+
+
+def decompress(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, ef_tree):
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(ef_tree)
+    out = [compress(g, e) for g, e in zip(flat_g, flat_e)]
+    deq = [decompress(q, s) for q, s, _ in out]
+    new_ef = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return jax.tree_util.tree_unflatten(tdef, deq), new_ef
+
+
+def init_ef(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def psum_compressed(g, axis: str, ef=None):
+    """int8-over-the-wire psum along ``axis`` (call inside shard_map).
+
+    The scale is made uniform across the axis with a psum-max (tiny payload),
+    so the int32 sum dequantizes exactly. Returns (summed f32, new_ef).
+    """
+    g32 = g.astype(jnp.float32)
+    if ef is not None:
+        g32 = g32 + ef
+    local_max = jnp.max(jnp.abs(g32))
+    global_max = lax.pmax(local_max, axis)
+    scale = jnp.maximum(global_max, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int32)
+    new_ef = g32 - q.astype(jnp.float32) * scale
+    total = lax.psum(q, axis)
+    return total.astype(jnp.float32) * scale, new_ef

@@ -1,0 +1,142 @@
+"""Logical-axis sharding rules (MaxText-style) for pjit/GSPMD.
+
+Models annotate activations/params with *logical* axis names; a per-family
+rule table maps them to mesh axes ("pod", "data", "model"). Outside a mesh
+context every hint is a no-op, so the same model code runs on 1 CPU device in
+tests and on the 512-chip dry-run mesh unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisRules = dict[str, Optional[object]]  # logical name -> mesh axis (or tuple)
+
+# LM default: batch over (pod, data); heads/ffn/vocab/experts over model.
+DEFAULT_LM_RULES: AxisRules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,
+    "d_model": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "d_ff": "model",
+    "experts": "model",
+    "expert_ff": None,
+    "vocab": "model",
+    "table_rows": "model",
+    "nodes": ("pod", "data"),
+    "edges": ("pod", "data"),
+    "docid": "model",
+    "candidates": "model",
+}
+
+_ctx = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh], rules: Optional[AxisRules] = None):
+    _ctx.mesh = mesh
+    _ctx.rules = rules or DEFAULT_LM_RULES
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_ctx, "mesh", None)
+
+
+def get_rules() -> AxisRules:
+    return getattr(_ctx, "rules", DEFAULT_LM_RULES)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, rules: Optional[AxisRules] = None):
+    old_mesh, old_rules = get_mesh(), get_rules()
+    set_mesh(mesh, rules)
+    try:
+        yield
+    finally:
+        set_mesh(old_mesh, old_rules)
+
+
+def _spec_for(logical: Sequence[Optional[str]], mesh: Mesh, rules: AxisRules) -> P:
+    parts = []
+    used: set = set()
+    for name in logical:
+        if name is None:
+            parts.append(None)
+            continue
+        axis = rules.get(name)
+        if axis is None:
+            parts.append(None)
+            continue
+        if isinstance(axis, tuple):
+            axis = tuple(a for a in axis
+                         if a in mesh.axis_names and a not in used)
+            used.update(axis)
+            parts.append(axis if axis else None)
+        else:
+            if axis not in mesh.axis_names or axis in used:
+                parts.append(None)    # first mapping wins (flax-rule style)
+            else:
+                used.add(axis)
+                parts.append(axis)
+    return P(*parts)
+
+
+def logical_sharding(logical: Sequence[Optional[str]],
+                     mesh: Optional[Mesh] = None,
+                     rules: Optional[AxisRules] = None) -> Optional[NamedSharding]:
+    mesh = mesh or get_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, _spec_for(logical, mesh, rules or get_rules()))
+
+
+def shard_hint(x, *logical: Optional[str]):
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    s = logical_sharding(logical)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def tree_shardings(axes_tree, mesh=None, rules=None):
+    """Map a pytree of logical-axis tuples to NamedShardings (or None)."""
+    return jax.tree_util.tree_map(
+        lambda ax: logical_sharding(ax, mesh, rules),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def zero1_shardings(params, param_shardings, mesh: Mesh):
+    """ZeRO-1: optimizer-moment shardings = param shardings with the largest
+    still-replicated, divisible dim additionally split over 'data'.
+
+    Returns a pytree (same structure as params) of NamedShardings for one
+    moment buffer; use for both mu and nu.
+    """
+    data = mesh.shape.get("data", 1)
+
+    def one(p, sh):
+        spec = list(sh.spec) if sh is not None else []
+        spec += [None] * (p.ndim - len(spec))
+
+        def uses(axis):
+            for e in spec:
+                if e == axis or (isinstance(e, tuple) and axis in e):
+                    return True
+            return False
+
+        if data > 1 and not uses("data"):
+            for i in range(p.ndim):
+                if spec[i] is None and p.shape[i] % data == 0:
+                    spec[i] = "data"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, params, param_shardings,
+                                  is_leaf=lambda x: x is None)

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper choosing kernel vs XLA fallback) and ref.py (pure-jnp oracle).
+On this CPU container kernels are validated with interpret=True; on TPU the
+same BlockSpecs compile natively.
+"""

@@ -1,0 +1,128 @@
+"""Pallas TPU flash attention (FlashAttention-2 schedule, TPU tiling).
+
+One kernel covers every assigned LM arch: causal, sliding-window (gemma2
+local layers), attention-logit softcap (gemma2), GQA head grouping (all),
+and per-batch kv-length masking (decode with a partially filled cache).
+
+Grid: (B, H, nq, nk), nk innermost with "arbitrary" semantics; (acc, m, l)
+live in VMEM scratch and persist across the nk loop. Blocks:
+  q   (1, 1, bq, D)   index (b, h, iq, 0)
+  k,v (1, 1, bk, D)   index (b, h // rep, ik, 0)     <- GQA: kv block reused
+  out (1, 1, bq, D)   index (b, h, iq, 0)            by rep consecutive heads
+MXU alignment: bq, bk multiples of 128; D = head_dim (64/128/256).
+VMEM: (bq + 2*bk + 2*bq)·D·4B + bq·bk·4B ≈ 0.6 MiB at bq=bk=128, D=128.
+
+Out-of-band blocks (fully masked by causality/window) are skipped with
+pl.when — on TPU the DMA for the block still occurs but no FLOPs; the ops.py
+wrapper additionally shrinks the grid for the pure-causal case.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, klen_ref, o_ref, acc, m_sc, l_sc,
+            *, scale, causal, window, softcap, nk, bq, bk, sq, skv, use_klen):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_sc[...] = jnp.full_like(m_sc, NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    iq = pl.program_id(2)
+    off = skv - sq                                  # causal offset (decode)
+    row = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + off
+    col = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # block-level skip: is any (row, col) pair in this tile live?
+    blk_row_max = iq * bq + bq - 1 + off
+    blk_row_min = iq * bq + off
+    blk_col_min = ik * bk
+    blk_col_max = ik * bk + bk - 1
+    live = jnp.bool_(True)
+    if causal:
+        live &= blk_col_min <= blk_row_max
+    if window > 0:
+        live &= blk_col_max > blk_row_min - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)          # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)          # [bk, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= col <= row
+        if window > 0:
+            mask &= col > row - window
+        if use_klen:
+            mask &= col < klen_ref[0]
+        mask &= row < skv                            # query padding rows
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_sc[...]                           # [bq, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)              # [bq, 1]
+        l_sc[...] = l_sc[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc[...] = acc[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_sc[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0, 0] = (acc[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, kv_len=None, *, causal=True, window=0,
+                           softcap=0.0, sm_scale=None, block_q=128,
+                           block_k=128, interpret=True):
+    B, H, Sq, D = q.shape
+    _, G, Skv, _ = k.shape
+    rep = H // G
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    nq, nk = Sq // bq, Skv // bk
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    use_klen = kv_len is not None
+    if kv_len is None:
+        kv_len = jnp.full((B,), Skv, jnp.int32)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        nk=nk, bq=bq, bk=bk, sq=Sq, skv=Skv, use_klen=use_klen)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // rep, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // rep, ik, 0)),
+            pl.BlockSpec((1,), lambda b, h, iq, ik: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v, kv_len)

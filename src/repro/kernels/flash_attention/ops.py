@@ -1,0 +1,58 @@
+"""Public attention ops: flash_attention (train/prefill) and flash_decode.
+
+``use_kernel=False`` (the CPU/dry-run default set by model configs) routes to
+the XLA reference; on TPU the Pallas path compiles natively.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+from .ref import flash_attention_ref
+from .xla_flash import xla_flash_attention
+
+# above this many score elements the XLA fallback uses the scan-based
+# online-softmax path (O(S·D) memory) instead of materialized scores
+_XLA_FLASH_THRESHOLD = 2048 * 2048
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "sm_scale", "use_kernel", "interpret",
+    "block_q", "block_k"))
+def flash_attention(q, k, v, kv_len=None, *, causal=True, window=0,
+                    softcap=0.0, sm_scale=None, use_kernel=False,
+                    interpret=True, block_q=128, block_k=128):
+    """q [B,H,Sq,D] x k,v [B,G,Skv,D] -> [B,H,Sq,D]."""
+    if not use_kernel:
+        if q.shape[2] * k.shape[2] >= _XLA_FLASH_THRESHOLD:
+            return xla_flash_attention(q, k, v, causal=causal, window=window,
+                                       softcap=softcap, kv_len=kv_len,
+                                       sm_scale=sm_scale)
+        return flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, kv_len=kv_len,
+                                   sm_scale=sm_scale)
+    return flash_attention_kernel(q, k, v, kv_len, causal=causal,
+                                  window=window, softcap=softcap,
+                                  sm_scale=sm_scale, block_q=block_q,
+                                  block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "sm_scale", "use_kernel", "interpret", "block_k"))
+def flash_decode(q, k, v, kv_len, *, window=0, softcap=0.0, sm_scale=None,
+                 use_kernel=False, interpret=True, block_k=512):
+    """Single-token decode: q [B,H,D] x cache k,v [B,G,Skv,D] -> [B,H,D].
+
+    Implemented as Sq=8-padded flash attention (TPU sublane alignment) with
+    kv-length masking; only the last query row is real.
+    """
+    B, H, D = q.shape
+    qq = jnp.zeros((B, H, 8, D), q.dtype).at[:, :, -1, :].set(q)
+    out = flash_attention(qq, k, v, kv_len, causal=True, window=window,
+                          softcap=softcap, sm_scale=sm_scale,
+                          use_kernel=use_kernel, interpret=interpret,
+                          block_q=8, block_k=block_k)
+    return out[:, :, -1, :]

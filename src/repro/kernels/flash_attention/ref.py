@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for flash attention (all LM-arch variants).
+
+Semantics shared with the kernel:
+  q: [B, H, Sq, D]; k,v: [B, G, Skv, D] with H = G * rep (GQA)
+  causal: offset-aware — query row i attends to kv col j iff
+          j <= i + (Skv - Sq) (so decode with Sq=1 sees the whole cache)
+  window: if w > 0, additionally j > i + (Skv - Sq) - w   (sliding window)
+  softcap: if c > 0, scores = c * tanh(scores / c)         (gemma2)
+  kv_len: [B] valid kv length per batch row (cols >= kv_len are masked)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        kv_len=None, sm_scale=None):
+    B, H, Sq, D = q.shape
+    G = k.shape[1]
+    rep = H // G
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    kk = jnp.repeat(k, rep, axis=1)
+    vv = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    if softcap and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    Skv = k.shape[2]
+    row = jnp.arange(Sq)[:, None] + (Skv - Sq)
+    col = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= col <= row
+    if window and window > 0:
+        mask &= col > row - window
+    m = mask[None, None]
+    if kv_len is not None:
+        m = m & (col[None, None] < kv_len[:, None, None, None])
+    s = jnp.where(m, s, NEG)
+    w = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    w = jnp.where(m, w, 0.0)
+    denom = jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w / denom, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,76 @@
+"""Scan-based online-softmax attention in plain XLA (no Pallas).
+
+This is the memory-correct fallback for platforms where the Pallas kernel
+cannot lower (the CPU dry-run) and the tail for very long sequences: a
+lax.scan over KV blocks with the FlashAttention-2 running-max recurrence.
+Peak memory is O(B·H·Sq·D + block·D) instead of O(Sq·Skv); each scan body is
+jax.checkpoint'ed so the backward pass recomputes the [Sq, block] score tile
+rather than saving it.
+
+Under GSPMD this composes with head/batch sharding (the scan is local); do
+NOT shard the KV sequence axis through this path — that is what the decode
+(split-KV) route is for.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG = -1e30
+
+
+def xla_flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        kv_len=None, sm_scale=None, block_k: int = 1024):
+    B, H, Sq, D = q.shape
+    _, G, Skv, _ = k.shape
+    rep = H // G
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    bk = min(block_k, Skv)
+    pad = (-Skv) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nk = (Skv + pad) // bk
+    qg = q.reshape(B, G, rep, Sq, D).astype(jnp.float32) * scale
+    # [nk, B, G, bk, D] scan layout
+    ks = k.reshape(B, G, nk, bk, D).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(B, G, nk, bk, D).transpose(2, 0, 1, 3, 4)
+    row = jnp.arange(Sq, dtype=jnp.int32) + (Skv - Sq)          # causal offset
+    if kv_len is None:
+        klen = jnp.full((B,), Skv, jnp.int32)
+    else:
+        klen = kv_len.astype(jnp.int32)
+
+    def body(carry, blk):
+        m, l, acc, kb = carry[0], carry[1], carry[2], carry[3]
+        kblk, vblk = blk
+        s = jnp.einsum("bgrqd,bgkd->bgrqk", qg, kblk.astype(jnp.float32))
+        if softcap and softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        col = kb * bk + jnp.arange(bk, dtype=jnp.int32)          # [bk]
+        mask = jnp.ones((Sq, bk), bool)
+        if causal:
+            mask &= col[None, :] <= row[:, None]
+        if window and window > 0:
+            mask &= col[None, :] > row[:, None] - window
+        mask = mask[None, None, None] & (col[None, None, None, None, :]
+                                         < klen[:, None, None, None, None])
+        s = jnp.where(mask, s, NEG)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bgrqk,bgkd->bgrqd", p,
+                                       vblk.astype(jnp.float32))
+        return (m_new, l, acc, kb + 1), None
+
+    m0 = jnp.full((B, G, rep, Sq, 1), NEG, jnp.float32)
+    l0 = jnp.zeros((B, G, rep, Sq, 1), jnp.float32)
+    a0 = jnp.zeros((B, G, rep, Sq, D), jnp.float32)
+    (m, l, acc, _), _ = lax.scan(jax.checkpoint(body),
+                                 (m0, l0, a0, jnp.int32(0)), (ks, vs))
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(B, H, Sq, D).astype(q.dtype)

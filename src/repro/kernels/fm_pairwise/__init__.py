@@ -1,0 +1,1 @@
+from .ops import fm_pairwise  # noqa: F401

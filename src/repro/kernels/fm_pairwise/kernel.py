@@ -1,0 +1,38 @@
+"""Pallas TPU kernel: fused FM pairwise interaction (sum-square trick).
+
+The recsys serving hot op after the embedding gather: one pass over the
+[bt, F, D] tile fuses both reductions — no [B, D] intermediates in HBM.
+Grid tiles the batch; F and D stay whole (F <= 64, D <= 128 for all assigned
+recsys archs, so a (bt=256, F, D) tile is bt·F·D·4 ≈ 4 MiB at the maximum).
+Output block is (bt, 128) with the scalar broadcast into lane 0 — keeping the
+store lane-aligned; ops.py slices lane 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(emb_ref, out_ref):
+    e = emb_ref[...].astype(jnp.float32)          # [bt, F, D]
+    s = e.sum(axis=1)                             # [bt, D]
+    sq = (e * e).sum(axis=1)
+    r = 0.5 * (s * s - sq).sum(axis=1)            # [bt]
+    out_ref[...] = jnp.broadcast_to(r[:, None], out_ref.shape)
+
+
+def fm_pairwise_kernel(emb, *, block_b: int = 256, interpret: bool = True):
+    B, F, D = emb.shape
+    bt = min(block_b, B)
+    assert B % bt == 0
+    return pl.pallas_call(
+        _kernel,
+        grid=(B // bt,),
+        in_specs=[pl.BlockSpec((bt, F, D), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((bt, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 128), jnp.float32),
+        interpret=interpret,
+    )(emb)[:, 0]

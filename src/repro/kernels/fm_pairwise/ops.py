@@ -1,0 +1,17 @@
+"""Public jit'd wrapper for the FM pairwise interaction."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import fm_pairwise_kernel
+from .ref import fm_pairwise_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def fm_pairwise(emb, *, use_kernel: bool = False, interpret: bool = True):
+    """emb float[B, F, D] -> float32[B] second-order FM term."""
+    if not use_kernel:
+        return fm_pairwise_ref(emb)
+    return fm_pairwise_kernel(emb, interpret=interpret)

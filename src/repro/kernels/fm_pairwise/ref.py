@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the FM pairwise-interaction kernel.
+
+FM second-order term (Rendle, ICDM'10) with the O(nk) sum-square identity:
+   sum_{i<j} <v_i, v_j> = 0.5 * sum_d [ (sum_f v_fd)^2 - sum_f v_fd^2 ]
+emb: float[B, F, D] (per-sample field embeddings, x-weighted) -> float[B].
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fm_pairwise_ref(emb):
+    e = emb.astype(jnp.float32)
+    s = e.sum(axis=1)                 # [B, D]
+    sq = (e * e).sum(axis=1)          # [B, D]
+    return 0.5 * (s * s - sq).sum(axis=1)

@@ -1,0 +1,1 @@
+from .ops import conjunctive_scan  # noqa: F401

@@ -1,0 +1,26 @@
+"""Public jit'd wrapper for the fused conjunctive scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import conjunctive_scan_kernel
+from .ref import conjunctive_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def conjunctive_scan(cands, lists, lens, fwd_rows, term_lo, term_hi,
+                     *, use_kernel: bool = True, interpret: bool = True):
+    """bool[B, T] conjunctive hits; see ref.py for semantics.
+
+    ``use_kernel=False`` falls back to the XLA reference (used by the
+    dry-run, where Pallas cannot lower on the host platform).
+    """
+    if not use_kernel:
+        return conjunctive_scan_ref(cands, lists, lens, fwd_rows, term_lo, term_hi)
+    bounds = jnp.stack([term_lo, term_hi], axis=1).astype(jnp.int32)
+    mask = conjunctive_scan_kernel(cands, lists, lens, fwd_rows, bounds,
+                                   interpret=interpret)
+    return mask.astype(jnp.bool_)

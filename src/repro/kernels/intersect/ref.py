@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the fused conjunctive scan (paper Fig 5 inner loop).
+
+Inputs (per query row; all padded, batch-leading):
+  cands:    int32[B, T]   candidate docids from the driver (shortest) list,
+                          INF_DOCID-padded
+  lists:    int32[B, P, L] the other prefix posting lists, INF_DOCID-padded,
+                          each row ascending
+  lens:     int32[B, P]   true lengths of those lists (0 => slot unused)
+  fwd_rows: int32[B, T, M] forward-index term rows of each candidate
+  term_lo/term_hi: int32[B] suffix term-id range [lo, hi)
+
+Output: bool[B, T] — candidate passes the intersection AND the forward
+suffix-range check.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INF = 2**31 - 1
+
+
+def conjunctive_scan_ref(cands, lists, lens, fwd_rows, term_lo, term_hi):
+    B, T = cands.shape
+    _, P, L = lists.shape
+    # membership: binary-search probe of each candidate into each list.
+    # searchsorted over the padded row works because INF pads sort last.
+    pos = jnp.stack(
+        [
+            jnp.stack([jnp.searchsorted(lists[b, p], cands[b], side="left")
+                       for p in range(P)], axis=0)
+            for b in range(B)
+        ],
+        axis=0,
+    )                                                     # [B, P, T]
+    gathered = jnp.take_along_axis(lists, jnp.minimum(pos, L - 1), axis=2)
+    present = (gathered == cands[:, None, :]) & (pos < lens[..., None])
+    used = (lens > 0)[:, :, None]
+    member = jnp.all(present | ~used, axis=1)             # [B, T]
+    in_range = (fwd_rows >= term_lo[:, None, None]) & (fwd_rows < term_hi[:, None, None])
+    fwd_ok = jnp.any(in_range, axis=2)                    # [B, T]
+    valid = cands != INF
+    return member & fwd_ok & valid

@@ -1,0 +1,1 @@
+from .ops import rmq_query  # noqa: F401

@@ -1,0 +1,36 @@
+"""Public jit'd wrapper: batched RMQ against a RangeMin structure."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rmq_query_kernel, BLOCK
+from .ref import rmq_query_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def rmq_query(values, st_pos, p, q, *, use_kernel: bool = True,
+              interpret: bool = True):
+    """Batched (pos, val) of argmin over values[p[i]..q[i]].
+
+    values: int32[n_pad] (INF padded to a BLOCK multiple); st_pos: sparse
+    table positions [levels, nb]. p, q: int32[B] inclusive ranges.
+    """
+    n_pad = values.shape[0]
+    nb = n_pad // BLOCK
+    st_val = values[st_pos]                         # [levels, nb]
+    pc = jnp.clip(p, 0, n_pad - 1)
+    qc = jnp.clip(q, 0, n_pad - 1)
+    pq = jnp.stack([pc, qc], axis=1).astype(jnp.int32)
+    pq = jnp.where((p > q)[:, None], jnp.stack([jnp.ones_like(pc), jnp.zeros_like(qc)], 1), pq)
+    blocks = values.reshape(nb, BLOCK)
+    lblock = blocks[pq[:, 0] // BLOCK]
+    rblock = blocks[pq[:, 1] // BLOCK]
+    if use_kernel:
+        out = rmq_query_kernel(pq, lblock, rblock, st_pos, st_val,
+                               interpret=interpret)
+        return out[:, 0], out[:, 1]
+    pos, val = rmq_query_ref(pq, lblock, rblock, st_pos, st_val, nb)
+    return pos, val

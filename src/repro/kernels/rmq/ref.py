@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the batched two-level RMQ kernel.
+
+Semantics: for each row b, argmin over values[p[b] .. q[b]] inclusive given
+  lblock[b]: the 128-wide block containing p (pre-gathered)
+  rblock[b]: the 128-wide block containing q
+  st_pos/st_val: sparse table over block minima (positions are global).
+Returns (pos, val); invalid ranges (p > q) give (0, INF).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+INF = 2**31 - 1
+BLOCK = 128
+
+
+def rmq_query_ref(pq, lblock, rblock, st_pos, st_val, n_blocks):
+    def one(pq_row, lb, rb):
+        p, q = pq_row[0], pq_row[1]
+        bp, bq = p // BLOCK, q // BLOCK
+        lane = jnp.arange(BLOCK, dtype=jnp.int32)
+        same = bp == bq
+        lmask = (lane >= p % BLOCK) & (lane <= jnp.where(same, q % BLOCK, BLOCK - 1))
+        lvals = jnp.where(lmask, lb, INF)
+        a1 = jnp.argmin(lvals)
+        c1_pos, c1_val = bp * BLOCK + a1, lvals[a1]
+        rmask = lane <= q % BLOCK
+        rvals = jnp.where(rmask, rb, INF)
+        a2 = jnp.argmin(rvals)
+        c2_pos = bq * BLOCK + a2
+        c2_val = jnp.where(same, INF, rvals[a2])
+        cnt = bq - bp - 1
+        has_mid = cnt > 0
+        j = jnp.where(has_mid, 31 - lax.clz(jnp.maximum(cnt, 1)), 0)
+        jc = jnp.minimum(j, st_pos.shape[0] - 1)
+        lo_b = jnp.minimum(bp + 1, n_blocks - 1)
+        hi_b = jnp.clip(bq - (1 << jc), 0, n_blocks - 1)
+        c3_pos, c3_val = st_pos[jc, lo_b], jnp.where(has_mid, st_val[jc, lo_b], INF)
+        c4_pos, c4_val = st_pos[jc, hi_b], jnp.where(has_mid, st_val[jc, hi_b], INF)
+        pos = jnp.stack([c1_pos, c2_pos, c3_pos, c4_pos])
+        val = jnp.stack([c1_val, c2_val, c3_val, c4_val])
+        val = jnp.where(p > q, INF, val)
+        best = jnp.argmin(val)
+        return pos[best], val[best]
+
+    return jax.vmap(one)(pq, lblock, rblock)

@@ -1,0 +1,149 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                       # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b      # one arch
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  ... [--single-pod-only | --multi-pod-only] [--out results.json]
+
+Per cell x {single-pod 16x16, multi-pod 2x16x16}:
+  jit(step, in_shardings, out_shardings).lower(*specs).compile()
+  -> memory_analysis(), cost_analysis(), collective-bytes parse (§Roofline).
+
+Results go to launch/dryrun_results/<mesh>/<arch>__<shape>.json and feed
+EXPERIMENTS.md §Dry-run and §Roofline.
+"""
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import get_arch, list_archs, all_cells  # noqa: E402
+from repro.launch.mesh import make_production_mesh         # noqa: E402
+from repro.launch.roofline import analyze, collective_bytes  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "dryrun_results")
+
+
+def run_cell(arch_id: str, shape: str, multi_pod: bool, out_dir: str,
+             keep_hlo: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    arch = get_arch(arch_id)
+    cell = next(c for c in arch.cells() if c.shape == shape)
+    rec = {"arch": arch_id, "shape": shape, "mesh": mesh_name,
+           "kind": cell.kind, "ok": False}
+    if cell.skip:
+        rec.update(ok=True, skipped=cell.skip)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = 1
+        for a in mesh.axis_names:
+            n_chips *= mesh.shape[a]
+        low = arch.lowerable(shape, mesh)
+        jitted = jax.jit(
+            low.fn,
+            in_shardings=low.in_shardings,
+            out_shardings=low.out_shardings,
+            donate_argnums=low.donate_argnums,
+        )
+        lowered = jitted.lower(*low.arg_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        terms = analyze(compiled, hlo, n_chips, low.model_flops, low.model_bytes)
+        rec.update(
+            ok=True,
+            note=low.note,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            n_chips=n_chips,
+            bytes_per_device={
+                "argument": getattr(mem, "argument_size_in_bytes", None),
+                "output": getattr(mem, "output_size_in_bytes", None),
+                "temp": getattr(mem, "temp_size_in_bytes", None),
+                "peak": getattr(mem, "peak_memory_in_bytes", None),
+            },
+            hlo_flops_per_partition=terms.hlo_flops_pp,
+            hlo_bytes_per_partition=terms.hlo_bytes_pp,
+            collective_bytes=terms.coll_bytes,
+            n_collectives=terms.n_collectives,
+            collective_breakdown=collective_bytes(hlo),
+            compute_s=terms.compute_s,
+            memory_s=terms.memory_s,
+            collective_s=terms.collective_s,
+            dominant=terms.dominant,
+            model_flops=low.model_flops,
+            model_bytes=low.model_bytes,
+            roofline_frac=terms.roofline_frac,
+        )
+        if keep_hlo:
+            with open(os.path.join(out_dir, f"{arch_id}__{shape}.hlo"), "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list_archs() + [None])
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = all_cells()
+    if args.arch:
+        cells = [c for c in cells if c.arch == args.arch]
+    if args.shape:
+        cells = [c for c in cells if c.shape == args.shape]
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(False)
+    if not args.single_pod_only:
+        meshes.append(True)
+
+    all_recs = []
+    for multi in meshes:
+        mesh_name = "pod2x16x16" if multi else "pod16x16"
+        out_dir = os.path.join(RESULTS_DIR, mesh_name)
+        os.makedirs(out_dir, exist_ok=True)
+        for c in cells:
+            print(f"[dryrun] {mesh_name} {c.arch} x {c.shape} ...", flush=True)
+            rec = run_cell(c.arch, c.shape, multi, out_dir, args.keep_hlo)
+            path = os.path.join(out_dir, f"{c.arch}__{c.shape}.json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            status = ("SKIP " + rec.get("skipped", "")[:40] if "skipped" in rec
+                      else ("ok" if rec["ok"] else "FAIL " + rec.get("error", "")[:120]))
+            extra = ""
+            if rec.get("ok") and "dominant" in rec:
+                extra = (f" dom={rec['dominant']} "
+                         f"t={max(rec['compute_s'], rec['memory_s'], rec['collective_s']):.2e}s"
+                         f" peak={(rec['bytes_per_device']['peak'] or 0)/2**30:.2f}GiB")
+            print(f"[dryrun]   -> {status}{extra}", flush=True)
+            all_recs.append(rec)
+
+    n_fail = sum(1 for r in all_recs if not r["ok"])
+    print(f"[dryrun] {len(all_recs)} cells, {n_fail} failures")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(all_recs, f, indent=1)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Production mesh construction (multi-pod dry-run contract)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1):
+    """Whatever fits the visible devices (tests / single host)."""
+    n = len(jax.devices())
+    data = max(n // model, 1)
+    return jax.make_mesh((data, model), ("data", "model"))

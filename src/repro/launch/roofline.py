@@ -1,0 +1,194 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Per (arch x shape x mesh), three terms in seconds (TPU v5e constants):
+  compute    = MODEL_FLOPS / (chips x 197e12)        [analytic 6ND-style]
+  memory     = MODEL_BYTES / (chips x 819e9)         [analytic minimum traffic]
+  collective = collective_bytes_per_device / 50e9    [parsed from HLO]
+
+Why analytic FLOPs/bytes: XLA's compiled.cost_analysis() on the host platform
+reports *per-partition* numbers and counts while-loop (lax.scan) bodies ONCE
+— for a 94-layer scanned transformer that is a ~100x undercount. We verified
+this with a calibration experiment (see EXPERIMENTS.md §Roofline). So the
+compute/memory numerators are analytic per-cell (the standard MFU practice),
+and cost_analysis is kept as a per-partition diagnostic.
+
+Why the collective parse multiplies loop trip counts: collectives inside the
+layer scan (TP all-reduces, MoE combine-psums) execute once per layer. The
+parser splits the optimized HLO into computations, walks from ENTRY through
+`while` ops, extracts each loop's trip count from its condition computation
+(largest integer constant in the ROOT compare), and multiplies nested
+collective bytes accordingly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_KTC_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> dict:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line.strip())
+        if m and (line.rstrip().endswith("{")):
+            cur = m.group(2)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    consts = []
+    for line in cond_lines:
+        consts += [int(x) for x in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def _direct_collectives(lines: list[str]) -> dict:
+    out = {k: 0 for k in COLLECTIVES}
+    out["count"] = 0
+    for line in lines:
+        s = line.strip()
+        for kind in COLLECTIVES:
+            if f" {kind}(" in s or f" {kind}-start(" in s:
+                eq = s.split("=", 1)
+                if len(eq) != 2:
+                    continue
+                shape_part = eq[1].split(kind)[0]
+                out[kind] += _shape_bytes(shape_part)
+                out["count"] += 1
+                break
+    return out
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """While-trip-count-aware collective byte totals (per device)."""
+    comps = _split_computations(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR.match(line.strip())
+        if m and m.group(1):
+            entry = m.group(2)
+            break
+    if entry is None and comps:
+        entry = next(iter(comps))
+
+    memo: dict[str, dict] = {}
+
+    def walk(name: str, depth: int = 0) -> dict:
+        if name in memo or name not in comps or depth > 8:
+            return memo.get(name, {k: 0 for k in COLLECTIVES} | {"count": 0})
+        lines = comps[name]
+        total = _direct_collectives(lines)
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                ktc = _KTC_RE.search(line)          # authoritative when present
+                if ktc:
+                    trips = int(ktc.group(1))
+                else:
+                    trips = _trip_count(comps.get(cond, []))
+                sub = walk(body, depth + 1)
+                for k in total:
+                    total[k] += trips * sub[k]
+        memo[name] = total
+        return total
+
+    return walk(entry) if entry else {k: 0 for k in COLLECTIVES} | {"count": 0}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: Optional[float]
+    model_bytes: Optional[float]
+    coll_bytes: float
+    n_collectives: int
+    hlo_flops_pp: float         # per-partition diagnostic (body-once caveat)
+    hlo_bytes_pp: float
+    n_chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)  # type: ignore
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_frac(self) -> Optional[float]:
+        """Achievable fraction of compute roofline: compute / bound."""
+        if self.bound_s <= 0:
+            return None
+        return self.compute_s / self.bound_s
+
+
+def analyze(compiled, hlo_text: str, n_chips: int,
+            model_flops: Optional[float],
+            model_bytes: Optional[float]) -> RooflineTerms:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = collective_bytes(hlo_text)
+    cbytes = float(sum(v for k, v in coll.items() if k != "count"))
+    mf = model_flops or 0.0
+    mb = model_bytes or 0.0
+    return RooflineTerms(
+        compute_s=mf / (n_chips * PEAK_FLOPS),
+        memory_s=mb / (n_chips * HBM_BW),
+        collective_s=cbytes / ICI_BW,
+        model_flops=model_flops,
+        model_bytes=model_bytes,
+        coll_bytes=cbytes,
+        n_collectives=int(coll["count"]),
+        hlo_flops_pp=float(ca.get("flops", 0.0)),
+        hlo_bytes_pp=float(ca.get("bytes accessed", 0.0)),
+        n_chips=n_chips,
+    )

@@ -1,0 +1,91 @@
+"""QAC serving launcher: build an index from a (synthetic) log and serve
+batched completions — the paper's system end-to-end.
+
+  PYTHONPATH=src python -m repro.launch.serve --queries 20000 --batch 256 \
+      [--stripes 4] [--interactive "bmw i3 s"]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.text import SynthLogConfig, generate_query_log
+from repro.core import build_qac_index, parse_queries, corpus_stats, INF_DOCID
+from repro.core.builder import build_corpus
+from repro.core.striped import build_striped
+from repro.serve.qac import qac_serve_step, qac_serve_striped
+from repro.core.strings import decode_string
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=20_000)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--stripes", type=int, default=0)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--interactive", default=None,
+                    help="serve one literal partial query and print strings")
+    args = ap.parse_args()
+
+    print(f"[serve] generating {args.queries} synthetic scored queries ...")
+    qs, sc = generate_query_log(SynthLogConfig(n_queries=args.queries))
+    t0 = time.time()
+    qidx, kept, scores = build_qac_index(qs, sc)
+    stats = corpus_stats(kept)
+    print(f"[serve] built index in {time.time()-t0:.1f}s: "
+          f"{stats.n_queries} completions, {stats.n_unique_terms} terms, "
+          f"{stats.avg_terms_per_query:.2f} terms/query")
+
+    if args.interactive:
+        pids, plen, pok, suf, slen = parse_queries(qidx.dictionary,
+                                                   [args.interactive])
+        docids = np.asarray(qac_serve_step(qidx, pids, plen, suf, slen,
+                                           k=args.k))[0]
+        print(f"[serve] completions for {args.interactive!r}:")
+        for d in docids:
+            if d == INF_DOCID:
+                break
+            terms, n = qidx.completions.extract(jnp.int32(d))
+            chars = qidx.dictionary.extract(terms[: int(n)])
+            words = [decode_string(np.asarray(c)) for c in np.asarray(chars)]
+            print(f"   #{d:6d}  {' '.join(words)}")
+        return
+
+    # throughput run on sampled partial queries
+    rng = np.random.default_rng(0)
+    partials = []
+    for qi in rng.integers(0, len(kept), args.batch):
+        toks = kept[qi].split()
+        cut = rng.integers(1, len(toks[-1]) + 1)
+        partials.append(" ".join(toks[:-1] + [toks[-1][:cut]]))
+    pids, plen, pok, suf, slen = parse_queries(qidx.dictionary, partials)
+
+    if args.stripes > 1:
+        dictionary, rows, sc2, _ = build_corpus(qs, sc)
+        order = np.lexsort(tuple(rows[:, j] for j in range(rows.shape[1] - 1, -1, -1)) + (-sc2,))
+        d_of_row = np.empty(len(rows), dtype=np.int32)
+        d_of_row[order] = np.arange(len(rows), dtype=np.int32)
+        striped = build_striped(rows, d_of_row, dictionary.n_terms, args.stripes)
+        fn = jax.jit(lambda a, b, c, d: qac_serve_striped(
+            striped, qidx.dictionary, a, b, c, d, k=args.k))
+    else:
+        fn = jax.jit(lambda a, b, c, d: qac_serve_step(qidx, a, b, c, d, k=args.k))
+
+    out = fn(pids, plen, suf, slen).block_until_ready()
+    t0 = time.time()
+    n_rounds = 5
+    for _ in range(n_rounds):
+        out = fn(pids, plen, suf, slen).block_until_ready()
+    dt = (time.time() - t0) / n_rounds
+    n_res = int((np.asarray(out) != INF_DOCID).sum())
+    print(f"[serve] batch={args.batch} k={args.k} stripes={max(args.stripes,1)}: "
+          f"{dt/args.batch*1e6:.1f} us/query, {args.batch/dt:.0f} QPS "
+          f"(host CPU), {n_res} results")
+
+
+if __name__ == "__main__":
+    main()

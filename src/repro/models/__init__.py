@@ -1,0 +1,6 @@
+from .transformer import TransformerConfig, MoESettings, TransformerLM  # noqa: F401
+from .mace import MACEConfig, MACEModel, GraphBatch  # noqa: F401
+from .recsys import (  # noqa: F401
+    RecsysConfig, FMModel, DINModel, BSTModel, MINDModel,
+    embedding_bag, embedding_bag_csr, bce_loss,
+)

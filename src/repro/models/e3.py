@@ -1,0 +1,90 @@
+"""E(3) machinery for MACE: real spherical harmonics (l<=2) and real Gaunt
+coefficients computed by spherical quadrature (no e3nn dependency).
+
+The coupling tensor G[i, j, k] = ∫ Y_i Y_j Y_k dΩ over the 9 real SH basis
+functions (l=0,1,2 flattened as [00, 1-1, 10, 11, 2-2, 2-1, 20, 21, 22]) is
+exact here: Gauss-Legendre x uniform-phi quadrature integrates the degree<=6
+polynomial integrands exactly. Contracting two equivariant feature vectors
+with G yields an equivariant product — the same function space as the
+Clebsch-Gordan tensor product used by MACE (arXiv:2206.07697), in the real
+basis.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+# real SH normalization constants
+_C00 = 0.28209479177387814
+_C1 = 0.4886025119029199
+_C2A = 1.0925484305920792
+_C20 = 0.31539156525252005
+_C22 = 0.5462742152960396
+
+N_LM = 9                       # (l_max+1)^2 for l_max = 2
+L_OF = np.array([0, 1, 1, 1, 2, 2, 2, 2, 2])  # l of each flattened component
+L_SLICES = {0: slice(0, 1), 1: slice(1, 4), 2: slice(4, 9)}
+
+
+def real_sph_harm(rhat):
+    """rhat [..., 3] unit vectors -> Y [..., 9] (jnp or np)."""
+    xp = jnp if not isinstance(rhat, np.ndarray) else np
+    x, y, z = rhat[..., 0], rhat[..., 1], rhat[..., 2]
+    one = xp.ones_like(x)
+    return xp.stack(
+        [
+            _C00 * one,
+            _C1 * y, _C1 * z, _C1 * x,
+            _C2A * x * y, _C2A * y * z, _C20 * (3 * z * z - 1),
+            _C2A * x * z, _C22 * (x * x - y * y),
+        ],
+        axis=-1,
+    )
+
+
+@functools.lru_cache(maxsize=1)
+def gaunt_tensor() -> np.ndarray:
+    """G[i, j, k] = ∫ Y_i Y_j Y_k dΩ, shape [9, 9, 9] (numpy, float64)."""
+    nt, nphi = 24, 48
+    ct, wt = np.polynomial.legendre.leggauss(nt)       # cos(theta) nodes
+    phi = (np.arange(nphi) + 0.5) * (2 * np.pi / nphi)
+    wphi = 2 * np.pi / nphi
+    st = np.sqrt(1 - ct**2)
+    # grid of unit vectors [nt*nphi, 3]
+    x = st[:, None] * np.cos(phi)[None, :]
+    y = st[:, None] * np.sin(phi)[None, :]
+    z = np.broadcast_to(ct[:, None], x.shape)
+    pts = np.stack([x, y, z], axis=-1).reshape(-1, 3)
+    w = (wt[:, None] * wphi * np.ones_like(phi)[None, :]).reshape(-1)
+    Y = real_sph_harm(pts)                              # [P, 9]
+    return np.einsum("p,pi,pj,pk->ijk", w, Y, Y, Y)
+
+
+def tensor_product(a, b, gaunt):
+    """Equivariant product: a, b [..., C, 9] x G [9,9,9] -> [..., C, 9]."""
+    return jnp.einsum("...ci,...cj,ijk->...ck", a, b, gaunt)
+
+
+def rotation_wigner_l1(R):
+    """Real-SH l=1 components transform as (y, z, x): D1 = P R P^T."""
+    P = np.array([[0, 1, 0], [0, 0, 1], [1, 0, 0]], dtype=np.float64)
+    return P @ R @ P.T
+
+
+def bessel_rbf(r, n_rbf: int, r_cut: float):
+    """Bessel radial basis (MACE/NequIP): sqrt(2/rc)·sin(nπr/rc)/r, n=1..n_rbf."""
+    eps = 1e-9
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    rr = jnp.maximum(r[..., None], eps)
+    return jnp.sqrt(2.0 / r_cut) * jnp.sin(n * jnp.pi * rr / r_cut) / rr
+
+
+def poly_cutoff(r, r_cut: float, p: int = 6):
+    """Polynomial cutoff envelope (DimeNet eq. 8); smooth -> 0 at r_cut."""
+    u = jnp.clip(r / r_cut, 0.0, 1.0)
+    return (1.0
+            - (p + 1) * (p + 2) / 2 * u**p
+            + p * (p + 2) * u ** (p + 1)
+            - p * (p + 1) / 2 * u ** (p + 2))

@@ -1,0 +1,291 @@
+"""RecSys architectures: FM, DIN, BST, MIND (assigned configs).
+
+Shared substrate: sparse embedding tables + EmbeddingBag built from
+``jnp.take`` + masked reduction / ``jax.ops.segment_sum`` (JAX has no native
+EmbeddingBag — DESIGN.md §5). Tables are row-sharded over the ``model`` mesh
+axis ("table_rows"); lookups become XLA gathers with collective plumbing
+inserted by GSPMD.
+
+Shapes contract (see configs/): every model exposes
+  train_step inputs:  features dict -> logits [B]   (BCE)
+  serve inputs:       same, batch sized per serve shape
+  retrieval (MIND):   user batch x [n_cand] item embeddings -> top-k
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, embed_init
+from ..distributed.sharding import shard_hint
+from ..kernels.fm_pairwise import fm_pairwise
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    kind: str                      # fm | din | bst | mind
+    embed_dim: int
+    n_sparse: int = 39             # categorical fields (fm)
+    field_vocab: int = 100_000     # rows per field table (fm)
+    item_vocab: int = 1_000_000    # item table rows (din/bst/mind)
+    cate_vocab: int = 10_000       # category table rows (din)
+    seq_len: int = 100             # behavior history length
+    n_heads: int = 8               # bst
+    n_blocks: int = 1              # bst
+    mlp: tuple = (200, 80)
+    attn_mlp: tuple = (80, 40)     # din
+    n_interests: int = 4           # mind
+    capsule_iters: int = 3         # mind
+    dtype: object = jnp.float32
+    use_kernel: bool = False       # Pallas fm_pairwise
+
+
+def embedding_bag(table, ids, mask=None, mode: str = "sum"):
+    """EmbeddingBag from take + masked reduce. ids [..., L] -> [..., D]."""
+    emb = jnp.take(table, ids, axis=0)                      # [..., L, D]
+    if mask is not None:
+        emb = emb * mask[..., None]
+    out = emb.sum(axis=-2)
+    if mode == "mean":
+        denom = (mask.sum(-1, keepdims=True) if mask is not None
+                 else jnp.float32(ids.shape[-1]))
+        out = out / jnp.maximum(denom, 1.0)
+    return out
+
+
+def embedding_bag_csr(table, flat_ids, segment_ids, n_segments: int):
+    """Ragged CSR variant via segment_sum (tested against the padded path)."""
+    emb = jnp.take(table, flat_ids, axis=0)
+    return jax.ops.segment_sum(emb, segment_ids, num_segments=n_segments)
+
+
+def _mlp_params(key, sizes, d_in):
+    ks = jax.random.split(key, len(sizes) + 1)
+    dims = [d_in] + list(sizes) + [1]
+    return [
+        {"w": dense_init(ks[i], (dims[i], dims[i + 1])),
+         "b": jnp.zeros((dims[i + 1],))}
+        for i in range(len(dims) - 1)
+    ]
+
+
+def _mlp_apply(layers, x, final_act=None):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1:
+            x = jax.nn.relu(x)
+    return x if final_act is None else final_act(x)
+
+
+# ---------------------------------------------------------------------------
+class FMModel:
+    """Factorization Machine (Rendle ICDM'10), O(nk) sum-square interaction."""
+
+    def __init__(self, cfg: RecsysConfig):
+        self.cfg = cfg
+
+    def init_params(self, key):
+        c = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "tables": embed_init(k1, (c.n_sparse, c.field_vocab, c.embed_dim)),
+            "linear": embed_init(k2, (c.n_sparse, c.field_vocab, 1)),
+            "bias": jnp.zeros(()),
+        }
+
+    def param_axes(self, params):
+        return {"tables": (None, "table_rows", None),
+                "linear": (None, "table_rows", None), "bias": ()}
+
+    def forward(self, params, feats):
+        """feats["sparse_ids"] int32[B, F] -> logits [B]."""
+        ids = feats["sparse_ids"]
+        B, F = ids.shape
+        f_idx = jnp.arange(F)
+        emb = params["tables"][f_idx[None, :], ids]        # [B, F, D]
+        emb = shard_hint(emb, "batch", None, None)
+        lin = params["linear"][f_idx[None, :], ids][..., 0].sum(-1)
+        pair = fm_pairwise(emb, use_kernel=self.cfg.use_kernel)
+        return params["bias"] + lin + pair
+
+
+# ---------------------------------------------------------------------------
+class DINModel:
+    """Deep Interest Network (arXiv:1706.06978): target attention over history."""
+
+    def __init__(self, cfg: RecsysConfig):
+        self.cfg = cfg
+
+    def init_params(self, key):
+        c = self.cfg
+        ks = jax.random.split(key, 6)
+        d = c.embed_dim
+        att_in = 4 * (2 * d)  # [h, t, h-t, h*t] on concat(item,cate) embeddings
+        return {
+            "item_table": embed_init(ks[0], (c.item_vocab, d)),
+            "cate_table": embed_init(ks[1], (c.cate_vocab, d)),
+            "att_mlp": _mlp_params(ks[2], c.attn_mlp, att_in),
+            "mlp": _mlp_params(ks[3], c.mlp, 3 * (2 * d)),
+        }
+
+    def param_axes(self, params):
+        ax = jax.tree_util.tree_map(lambda _: (None,), params)
+        ax["item_table"] = ("table_rows", None)
+        ax["cate_table"] = ("table_rows", None)
+        return ax
+
+    def forward(self, params, feats):
+        """hist_items/hist_cates int32[B, L], hist_mask f32[B, L],
+        target_item/target_cate int32[B] -> logits [B]."""
+        c = self.cfg
+        hi = jnp.take(params["item_table"], feats["hist_items"], axis=0)
+        hc = jnp.take(params["cate_table"], feats["hist_cates"], axis=0)
+        h = jnp.concatenate([hi, hc], axis=-1)                # [B, L, 2D]
+        ti = jnp.take(params["item_table"], feats["target_item"], axis=0)
+        tc = jnp.take(params["cate_table"], feats["target_cate"], axis=0)
+        t = jnp.concatenate([ti, tc], axis=-1)[:, None, :]    # [B, 1, 2D]
+        tt = jnp.broadcast_to(t, h.shape)
+        att_in = jnp.concatenate([h, tt, h - tt, h * tt], axis=-1)
+        score = _mlp_apply(params["att_mlp"], att_in)[..., 0]  # [B, L]
+        score = jnp.where(feats["hist_mask"] > 0, score, -1e30)
+        w = jax.nn.softmax(score, axis=-1) * (feats["hist_mask"].sum(-1, keepdims=True) > 0)
+        pooled = (w[..., None] * h).sum(axis=1)                # [B, 2D]
+        x = jnp.concatenate([pooled, t[:, 0], pooled * t[:, 0]], axis=-1)
+        return _mlp_apply(params["mlp"], x)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+class BSTModel:
+    """Behavior Sequence Transformer (arXiv:1905.06874)."""
+
+    def __init__(self, cfg: RecsysConfig):
+        self.cfg = cfg
+
+    def init_params(self, key):
+        c = self.cfg
+        d = c.embed_dim
+        ks = jax.random.split(key, 8 + 4 * c.n_blocks)
+        p = {
+            "item_table": embed_init(ks[0], (c.item_vocab, d)),
+            "pos_table": embed_init(ks[1], (c.seq_len + 1, d)),
+            "blocks": [],
+            "mlp": _mlp_params(ks[2], c.mlp, (c.seq_len + 1) * d),
+        }
+        for b in range(c.n_blocks):
+            kb = jax.random.split(ks[4 + b], 6)
+            p["blocks"].append({
+                "wq": dense_init(kb[0], (d, d)), "wk": dense_init(kb[1], (d, d)),
+                "wv": dense_init(kb[2], (d, d)), "wo": dense_init(kb[3], (d, d)),
+                "ff1": dense_init(kb[4], (d, 4 * d)), "ff2": dense_init(kb[5], (4 * d, d)),
+                "ln1": jnp.zeros((d,)), "ln2": jnp.zeros((d,)),
+            })
+        return p
+
+    def param_axes(self, params):
+        ax = jax.tree_util.tree_map(lambda _: (None,), params)
+        ax["item_table"] = ("table_rows", None)
+        return ax
+
+    def _block(self, bp, x, mask):
+        c = self.cfg
+        d = c.embed_dim
+        hd = d // c.n_heads
+        B, L, _ = x.shape
+
+        def split(z):
+            return z.reshape(B, L, c.n_heads, hd).swapaxes(1, 2)
+
+        from .layers import rms_norm
+        h = rms_norm(x, bp["ln1"])
+        q, k, v = split(h @ bp["wq"]), split(h @ bp["wk"]), split(h @ bp["wv"])
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+        s = jnp.where(mask[:, None, None, :] > 0, s, -1e30)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", a, v).swapaxes(1, 2).reshape(B, L, d)
+        x = x + o @ bp["wo"]
+        h = rms_norm(x, bp["ln2"])
+        return x + jax.nn.leaky_relu(h @ bp["ff1"]) @ bp["ff2"]
+
+    def forward(self, params, feats):
+        """hist_items int32[B, L], hist_mask [B, L], target_item int32[B]."""
+        c = self.cfg
+        hist = jnp.take(params["item_table"], feats["hist_items"], axis=0)
+        tgt = jnp.take(params["item_table"], feats["target_item"], axis=0)
+        x = jnp.concatenate([hist, tgt[:, None, :]], axis=1)   # [B, L+1, D]
+        x = x + params["pos_table"][None]
+        mask = jnp.concatenate(
+            [feats["hist_mask"], jnp.ones((x.shape[0], 1), x.dtype)], axis=1)
+        x = x * mask[..., None]
+        for bp in params["blocks"]:
+            x = self._block(bp, x, mask)
+        B = x.shape[0]
+        return _mlp_apply(params["mlp"], x.reshape(B, -1))[..., 0]
+
+
+# ---------------------------------------------------------------------------
+class MINDModel:
+    """Multi-Interest Network with Dynamic routing (arXiv:1904.08030)."""
+
+    def __init__(self, cfg: RecsysConfig):
+        self.cfg = cfg
+
+    def init_params(self, key):
+        c = self.cfg
+        ks = jax.random.split(key, 4)
+        d = c.embed_dim
+        return {
+            "item_table": embed_init(ks[0], (c.item_vocab, d)),
+            "s_matrix": dense_init(ks[1], (d, d)),  # shared bilinear (B2I)
+        }
+
+    def param_axes(self, params):
+        return {"item_table": ("table_rows", None), "s_matrix": (None, None)}
+
+    def interests(self, params, hist_ids, hist_mask, key=None):
+        """Capsule B2I dynamic routing -> [B, K, D] interest capsules."""
+        c = self.cfg
+        e = jnp.take(params["item_table"], hist_ids, axis=0)   # [B, L, D]
+        eh = (e @ params["s_matrix"]) * hist_mask[..., None]   # behavior caps
+        B, L, D = eh.shape
+        K = c.n_interests
+        # fixed (non-learned) routing-logit init, shared across batch
+        b_init = jax.random.normal(jax.random.PRNGKey(0), (K, L)) * 1.0
+        blog = jnp.broadcast_to(b_init[None], (B, K, L))
+
+        def squash(v):
+            n2 = jnp.sum(v * v, axis=-1, keepdims=True)
+            return (n2 / (1 + n2)) * v / jnp.sqrt(n2 + 1e-9)
+
+        caps = None
+        for _ in range(c.capsule_iters):
+            w = jax.nn.softmax(blog, axis=1)                   # over K
+            w = w * hist_mask[:, None, :]
+            caps = squash(jnp.einsum("bkl,bld->bkd", w, eh))
+            blog = blog + jnp.einsum("bkd,bld->bkl", caps, eh)
+        return caps
+
+    def forward(self, params, feats):
+        """Training score: label-aware attention (pow 2) to the target item."""
+        caps = self.interests(params, feats["hist_items"], feats["hist_mask"])
+        tgt = jnp.take(params["item_table"], feats["target_item"], axis=0)
+        s = jnp.einsum("bkd,bd->bk", caps, tgt)
+        w = jax.nn.softmax(s * s, axis=-1)                      # label-aware pow-2
+        u = jnp.einsum("bk,bkd->bd", w, caps)
+        return jnp.einsum("bd,bd->b", u, tgt)
+
+    def retrieve(self, params, feats, cand_emb, k: int = 100):
+        """Score 1 user against n_cand items: batched dot + max over interests."""
+        caps = self.interests(params, feats["hist_items"], feats["hist_mask"])
+        s = jnp.einsum("bkd,nd->bkn", caps, cand_emb)          # [B, K, N]
+        s = shard_hint(s, "batch", None, "candidates")
+        score = s.max(axis=1)                                   # [B, N]
+        return jax.lax.top_k(score, k)
+
+
+def bce_loss(logits, labels):
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))

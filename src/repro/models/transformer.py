@@ -1,0 +1,484 @@
+"""Unified decoder-only transformer covering all five assigned LM archs.
+
+One config expresses: llama-style GQA (smollm), qk-norm GQA (qwen3),
+local/global alternating + softcaps + sandwich norms (gemma2), and
+shared+routed MoE (qwen2-moe, qwen3-moe). Layers are scanned (compile time
+independent of depth); activations/params carry logical sharding hints;
+the MoE block optionally runs expert-parallel under shard_map.
+
+Functional style: ``init_params`` builds a dict pytree; ``forward`` /
+``prefill`` / ``decode_step`` are pure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from .layers import rms_norm, apply_rope, gated_act, dense_init, embed_init
+from ..distributed.sharding import shard_hint, get_mesh
+from ..kernels.flash_attention import flash_attention, flash_decode
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESettings:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+    norm_topk: bool = True
+    aux_coef: float = 1e-2
+    pad_experts_to: int = 0   # >n_experts: pad weight arrays so EP divides
+                              # the mesh (padded experts never receive tokens)
+
+    @property
+    def e_padded(self) -> int:
+        return max(self.pad_experts_to, self.n_experts)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    act: str = "swiglu"
+    qk_norm: bool = False
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    window: int = 0                  # local-layer sliding window (gemma2: 4096)
+    layer_pattern: str = "global"    # "global" | "local_global"
+    post_norms: bool = False         # gemma2 sandwich norms
+    embed_scale: bool = False        # gemma2 sqrt(d) embedding scale
+    tie_embeddings: bool = True
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    moe: Optional[MoESettings] = None
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.bfloat16
+    use_flash: bool = False          # Pallas kernels (TPU backend)
+    remat: bool = True
+    moe_shard_map: bool = False      # expert-parallel shard_map MoE
+    moe_fsdp: bool = False           # expert weights additionally sharded over
+                                     # 'data' (expert_ff dim), gathered per layer
+    moe_psum_bf16: bool = False      # cast the EP combine psum to bf16 (halves
+                                     # the per-layer [T,d] f32 wire bytes)
+
+    @property
+    def layers_per_step(self) -> int:
+        return 2 if self.layer_pattern == "local_global" else 1
+
+    @property
+    def n_steps(self) -> int:
+        assert self.n_layers % self.layers_per_step == 0
+        return self.n_layers // self.layers_per_step
+
+    def window_of(self, pos_in_step: int) -> int:
+        if self.layer_pattern == "local_global":
+            return self.window if pos_in_step == 0 else 0
+        return self.window
+
+    def param_count(self) -> int:
+        c = self
+        attn = c.d_model * c.head_dim * (c.n_heads * 2 + c.n_kv_heads * 2)
+        if c.moe:
+            ffn = c.moe.n_experts * 3 * c.d_model * c.moe.d_expert
+            ffn += c.d_model * c.moe.n_experts
+            if c.moe.shared_d_ff:
+                ffn += 3 * c.d_model * c.moe.shared_d_ff + c.d_model
+        else:
+            ffn = 3 * c.d_model * c.d_ff
+        per_layer = attn + ffn + 2 * c.d_model * (2 if c.post_norms else 1)
+        head = 0 if c.tie_embeddings else c.d_model * c.vocab
+        return c.n_layers * per_layer + c.vocab * c.d_model + head + c.d_model
+
+    def active_param_count(self) -> int:
+        """MoE: params touched per token (6·N_active·D convention)."""
+        if not self.moe:
+            return self.param_count()
+        c = self
+        attn = c.d_model * c.head_dim * (c.n_heads * 2 + c.n_kv_heads * 2)
+        ffn = c.moe.top_k * 3 * c.d_model * c.moe.d_expert
+        ffn += c.d_model * c.moe.n_experts
+        if c.moe.shared_d_ff:
+            ffn += 3 * c.d_model * c.moe.shared_d_ff
+        head = 0 if c.tie_embeddings else c.d_model * c.vocab
+        return c.n_layers * (attn + ffn) + c.vocab * c.d_model + head
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+class TransformerLM:
+    def __init__(self, cfg: TransformerConfig):
+        self.cfg = cfg
+
+    # -- init ----------------------------------------------------------------
+    def init_params(self, key) -> dict:
+        c = self.cfg
+        pd = c.param_dtype
+        keys = jax.random.split(key, 16)
+        H, G, hd, d = c.n_heads, c.n_kv_heads, c.head_dim, c.d_model
+
+        def layer_params(k):
+            ks = jax.random.split(k, 12)
+            p = {
+                "wq": dense_init(ks[0], (d, H * hd), dtype=pd),
+                "wk": dense_init(ks[1], (d, G * hd), dtype=pd),
+                "wv": dense_init(ks[2], (d, G * hd), dtype=pd),
+                "wo": dense_init(ks[3], (H * hd, d), dtype=pd),
+                "pre_attn": jnp.zeros((d,), pd),
+                "pre_mlp": jnp.zeros((d,), pd),
+            }
+            if c.post_norms:
+                p["post_attn"] = jnp.zeros((d,), pd)
+                p["post_mlp"] = jnp.zeros((d,), pd)
+            if c.qk_norm:
+                p["q_norm"] = jnp.zeros((hd,), pd)
+                p["k_norm"] = jnp.zeros((hd,), pd)
+            if c.moe:
+                m = c.moe
+                p["router"] = dense_init(ks[4], (d, m.n_experts), dtype=jnp.float32)
+                p["we_gate"] = dense_init(ks[5], (m.e_padded, d, m.d_expert), in_axis=1, dtype=pd)
+                p["we_up"] = dense_init(ks[6], (m.e_padded, d, m.d_expert), in_axis=1, dtype=pd)
+                p["we_down"] = dense_init(ks[7], (m.e_padded, m.d_expert, d), in_axis=1, dtype=pd)
+                if m.shared_d_ff:
+                    p["ws_gate"] = dense_init(ks[8], (d, m.shared_d_ff), dtype=pd)
+                    p["ws_up"] = dense_init(ks[9], (d, m.shared_d_ff), dtype=pd)
+                    p["ws_down"] = dense_init(ks[10], (m.shared_d_ff, d), dtype=pd)
+                    p["ws_gate_proj"] = dense_init(ks[11], (d, 1), dtype=pd)
+            else:
+                p["w_gate"] = dense_init(ks[4], (d, c.d_ff), dtype=pd)
+                p["w_up"] = dense_init(ks[5], (d, c.d_ff), dtype=pd)
+                p["w_down"] = dense_init(ks[6], (c.d_ff, d), dtype=pd)
+            return p
+
+        lkeys = jax.random.split(keys[0], c.n_steps * c.layers_per_step)
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs).reshape((c.n_steps, c.layers_per_step) + xs[0].shape),
+            *[layer_params(k) for k in lkeys],
+        )
+        params = {
+            "embed": embed_init(keys[1], (c.vocab, d), dtype=pd),
+            "layers": stacked,
+            "final_norm": jnp.zeros((d,), pd),
+        }
+        if not c.tie_embeddings:
+            params["lm_head"] = dense_init(keys[2], (d, c.vocab), dtype=pd)
+        return params
+
+    def param_axes(self, params) -> dict:
+        """Pytree of logical-axis tuples mirroring ``params`` (for pjit)."""
+        c = self.cfg
+
+        def axes_of(path, leaf):
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            base = {
+                "embed": ("vocab", "d_model"),
+                "lm_head": ("d_model", "vocab"),
+                "final_norm": ("d_model",),
+                "wq": ("d_model", "heads"),
+                "wk": ("d_model", "kv_heads"),
+                "wv": ("d_model", "kv_heads"),
+                "wo": ("heads", "d_model"),
+                "w_gate": ("d_model", "d_ff"),
+                "w_up": ("d_model", "d_ff"),
+                "w_down": ("d_ff", "d_model"),
+                "router": ("d_model", None),
+                "we_gate": ("experts", "d_model", "expert_ff"),
+                "we_up": ("experts", "d_model", "expert_ff"),
+                "we_down": ("experts", "expert_ff", "d_model"),
+                "ws_gate": ("d_model", "d_ff"),
+                "ws_up": ("d_model", "d_ff"),
+                "ws_down": ("d_ff", "d_model"),
+                "ws_gate_proj": ("d_model", None),
+                "pre_attn": (None,), "pre_mlp": (None,),
+                "post_attn": (None,), "post_mlp": (None,),
+                "q_norm": (None,), "k_norm": (None,),
+            }[name]
+            # layer-stacked params get two leading replicated dims
+            if any(getattr(pp, "key", None) == "layers" for pp in path):
+                return (None, None) + base
+            return base
+
+        return jax.tree_util.tree_map_with_path(axes_of, params)
+
+    # -- blocks ----------------------------------------------------------------
+    def _attention(self, lp, x, positions, window: int, *, cache=None,
+                   cache_pos=None, kv_len=None):
+        c = self.cfg
+        H, G, hd = c.n_heads, c.n_kv_heads, c.head_dim
+        B, S, d = x.shape
+        h = rms_norm(x, lp["pre_attn"], c.norm_eps)
+        q = (h @ lp["wq"]).reshape(B, S, H, hd)
+        k = (h @ lp["wk"]).reshape(B, S, G, hd)
+        v = (h @ lp["wv"]).reshape(B, S, G, hd)
+        if c.qk_norm:
+            q = rms_norm(q, lp["q_norm"], c.norm_eps)
+            k = rms_norm(k, lp["k_norm"], c.norm_eps)
+        q = apply_rope(q.swapaxes(1, 2), positions[:, None, :], c.rope_theta)
+        k = apply_rope(k.swapaxes(1, 2), positions[:, None, :], c.rope_theta)
+        v = v.swapaxes(1, 2)
+        q = shard_hint(q, "batch", "heads", "seq", None)
+        k = shard_hint(k, "batch", "kv_heads", "seq", None)
+        sm_scale = hd ** -0.5
+        if cache is None:
+            out = flash_attention(q, k, v, causal=True, window=window,
+                                  softcap=c.attn_softcap, sm_scale=sm_scale,
+                                  use_kernel=c.use_flash)
+            new_cache = (k, v)
+        else:
+            ck, cv = cache  # [B, G, Sc, hd]
+            bidx = jnp.arange(B)
+            ck = ck.at[bidx, :, cache_pos, :].set(k[:, :, 0, :])
+            cv = cv.at[bidx, :, cache_pos, :].set(v[:, :, 0, :])
+            out = flash_decode(q[:, :, 0, :], ck, cv, kv_len, window=0,
+                               softcap=c.attn_softcap, sm_scale=sm_scale,
+                               use_kernel=c.use_flash)[:, :, None, :]
+            new_cache = (ck, cv)
+        out = out.swapaxes(1, 2).reshape(B, S, H * hd)
+        out = out @ lp["wo"]
+        if c.post_norms:
+            out = rms_norm(out, lp["post_attn"], c.norm_eps)
+        return out, new_cache
+
+    def _dense_mlp(self, lp, x):
+        c = self.cfg
+        h = rms_norm(x, lp["pre_mlp"], c.norm_eps)
+        h = shard_hint(h, "batch", "seq", "d_model")
+        out = gated_act(h @ lp["w_gate"], h @ lp["w_up"], c.act) @ lp["w_down"]
+        if c.post_norms:
+            out = rms_norm(out, lp["post_mlp"], c.norm_eps)
+        return out, jnp.float32(0.0)
+
+    # -- MoE -------------------------------------------------------------------
+    def _route(self, lp, h2d):
+        """Router: returns (idx int32[T,k], gates f32[T,k], aux_loss)."""
+        m = self.cfg.moe
+        logits = h2d.astype(jnp.float32) @ lp["router"]
+        probs = jax.nn.softmax(logits, axis=-1)                 # [T, E]
+        gates, idx = lax.top_k(probs, m.top_k)                  # [T, k]
+        if m.norm_topk:
+            gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        # Switch-style load-balance loss
+        T = h2d.shape[0]
+        f = jnp.zeros((m.n_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+        f = f / (T * m.top_k)
+        p_mean = probs.mean(axis=0)
+        aux = m.n_experts * jnp.sum(f * p_mean)
+        return idx, gates, aux
+
+    @staticmethod
+    def _experts_apply(x2d, idx, gates, we_gate, we_up, we_down, base_expert,
+                       capacity: int, act: str):
+        """Scan over (local) experts: capacity-gather -> FFN -> scatter-add.
+
+        x2d [T, d]; idx/gates [T, k]; we_* [E_loc, ...]; returns [T, d].
+        """
+        T, d = x2d.shape
+        E_loc = we_gate.shape[0]
+        x_pad = jnp.concatenate([x2d, jnp.zeros((1, d), x2d.dtype)], axis=0)
+        out0 = jnp.zeros_like(x_pad)
+
+        def body(carry, ew):
+            w1, w3, w2, e_id = ew
+            match = idx == e_id                                  # [T, k]
+            gate = (gates * match).sum(-1).astype(x2d.dtype)     # [T]
+            tok = match.any(-1)
+            pos = jnp.cumsum(tok.astype(jnp.int32)) - 1
+            keep = tok & (pos < capacity)
+            slot = jnp.where(keep, pos, capacity)
+            slot_ids = jnp.full((capacity + 1,), T, jnp.int32)
+            slot_ids = slot_ids.at[slot].set(jnp.arange(T, dtype=jnp.int32))
+            slot_ids = slot_ids[:capacity]
+            xe = x_pad[slot_ids]                                 # [C, d]
+            he = gated_act(xe @ w1, xe @ w3, act) @ w2           # [C, d]
+            gpad = jnp.concatenate([gate, jnp.zeros((1,), gate.dtype)])
+            carry = carry.at[slot_ids].add(he * gpad[slot_ids][:, None])
+            return carry, None
+
+        e_ids = base_expert + jnp.arange(E_loc, dtype=jnp.int32)
+        out, _ = lax.scan(body, out0, (we_gate, we_up, we_down, e_ids))
+        return out[:T]
+
+    def _moe_mlp(self, lp, x):
+        c = self.cfg
+        m = c.moe
+        B, S, d = x.shape
+        h = rms_norm(x, lp["pre_mlp"], c.norm_eps)
+        h2d = h.reshape(B * S, d)
+        idx, gates, aux = self._route(lp, h2d)
+
+        mesh = get_mesh()
+        use_sm = (c.moe_shard_map and mesh is not None
+                  and "model" in mesh.axis_names
+                  and mesh.shape["model"] > 1
+                  and m.e_padded % mesh.shape["model"] == 0)
+        if use_sm:
+            ep = mesh.shape["model"]
+            dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+            dp = 1
+            for a in dp_axes:
+                dp *= mesh.shape[a]
+            T_loc = (B // dp) * S
+            cap = max(8, int(T_loc * m.top_k / m.n_experts * m.capacity_factor))
+
+            fsdp = (c.moe_fsdp and "data" in mesh.axis_names
+                    and mesh.shape["data"] > 1
+                    and m.d_expert % mesh.shape["data"] == 0)
+
+            def local_moe(h2d_, idx_, gates_, w1, w3, w2):
+                if fsdp:   # FSDP: gather the ff shards just-in-time
+                    w1 = lax.all_gather(w1, "data", axis=2, tiled=True)
+                    w3 = lax.all_gather(w3, "data", axis=2, tiled=True)
+                    w2 = lax.all_gather(w2, "data", axis=1, tiled=True)
+                base = lax.axis_index("model") * (m.e_padded // ep)
+                part = self._experts_apply(
+                    h2d_.reshape(-1, d), idx_.reshape(-1, m.top_k),
+                    gates_.reshape(-1, m.top_k), w1, w3, w2,
+                    base, cap, c.act)
+                if c.moe_psum_bf16:
+                    part = part.astype(jnp.bfloat16)
+                return lax.psum(part, "model").astype(h2d_.dtype).reshape(h2d_.shape)
+
+            bspec = P(dp_axes if dp_axes else None)
+            if fsdp:
+                wspecs = (P("model", None, "data"), P("model", None, "data"),
+                          P("model", "data", None))
+            else:
+                wspecs = (P("model"), P("model"), P("model"))
+            out2d = shard_map(
+                local_moe, mesh=mesh,
+                in_specs=(bspec, bspec, bspec) + wspecs,
+                out_specs=bspec,
+                check_vma=False,
+            )(h2d.reshape(B * S, d), idx, gates,
+              lp["we_gate"], lp["we_up"], lp["we_down"])
+        else:
+            cap = max(8, int(B * S * m.top_k / m.n_experts * m.capacity_factor))
+            out2d = self._experts_apply(h2d, idx, gates, lp["we_gate"],
+                                        lp["we_up"], lp["we_down"],
+                                        jnp.int32(0), cap, c.act)
+        out = out2d.reshape(B, S, d)
+        if m.shared_d_ff:
+            g = jax.nn.sigmoid(h @ lp["ws_gate_proj"])
+            shared = gated_act(h @ lp["ws_gate"], h @ lp["ws_up"], c.act) @ lp["ws_down"]
+            out = out + g * shared
+        if c.post_norms:
+            out = rms_norm(out, lp["post_mlp"], c.norm_eps)
+        return out, aux
+
+    def _mlp(self, lp, x):
+        return self._moe_mlp(lp, x) if self.cfg.moe else self._dense_mlp(lp, x)
+
+    # -- full forward (training / prefill) --------------------------------------
+    def forward(self, params, tokens, *, return_cache: bool = False):
+        """tokens int32[B, S] -> (logits f32[B, S, V], aux_loss, cache|None)."""
+        c = self.cfg
+        B, S = tokens.shape
+        x = params["embed"][tokens].astype(c.dtype)
+        if c.embed_scale:
+            x = x * jnp.sqrt(jnp.float32(c.d_model)).astype(c.dtype)
+        x = shard_hint(x, "batch", "seq", "d_model")
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+        def step(x, lps):
+            aux_t = jnp.float32(0.0)
+            caches = []
+            for i in range(c.layers_per_step):
+                lp = jax.tree_util.tree_map(lambda a: a[i], lps)
+                attn, kv = self._attention(lp, x, positions, c.window_of(i))
+                x2 = x + attn
+                mlp, aux = self._mlp(lp, x2)
+                x = x2 + mlp
+                x = shard_hint(x, "batch", "seq", "d_model")
+                aux_t += aux
+                caches.append(kv)
+            return x, (aux_t, caches if return_cache else None)
+
+        body = jax.checkpoint(step) if c.remat else step
+        x, (auxes, caches) = lax.scan(body, x, params["layers"])
+        x = rms_norm(x, params["final_norm"], c.norm_eps)
+        head = params["embed"].T if c.tie_embeddings else params["lm_head"]
+        logits = (x @ head.astype(c.dtype)).astype(jnp.float32)
+        if c.final_softcap:
+            logits = c.final_softcap * jnp.tanh(logits / c.final_softcap)
+        logits = shard_hint(logits, "batch", "seq", "vocab")
+        return logits, auxes.sum(), caches
+
+    def loss_fn(self, params, tokens, targets, mask):
+        logits, aux, _ = self.forward(params, tokens)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+        if self.cfg.moe:
+            loss = loss + self.cfg.moe.aux_coef * aux / self.cfg.n_layers
+        return loss
+
+    # -- KV-cache serving --------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        c = self.cfg
+        G, hd = c.n_kv_heads, c.head_dim
+        caches = {"pos": jnp.zeros((batch,), jnp.int32)}
+        ks, vs = [], []
+        for i in range(c.layers_per_step):
+            w = c.window_of(i)
+            Sc = min(w, max_len) if w > 0 else max_len
+            shape = (c.n_steps, batch, G, Sc, hd)
+            ks.append(jnp.zeros(shape, c.dtype))
+            vs.append(jnp.zeros(shape, c.dtype))
+        caches["k"] = tuple(ks)
+        caches["v"] = tuple(vs)
+        return caches
+
+    def decode_step(self, params, cache, tokens):
+        """One token per sequence. tokens int32[B] -> (logits [B, V], cache)."""
+        c = self.cfg
+        B = tokens.shape[0]
+        pos = cache["pos"]                               # [B]
+        x = params["embed"][tokens][:, None, :].astype(c.dtype)
+        if c.embed_scale:
+            x = x * jnp.sqrt(jnp.float32(c.d_model)).astype(c.dtype)
+        x = shard_hint(x, "batch", None, "d_model")
+        positions = pos[:, None]
+
+        def step(carry, scanned):
+            x = carry
+            lps, layer_ks, layer_vs = scanned
+            new_ks, new_vs = [], []
+            for i in range(c.layers_per_step):
+                lp = jax.tree_util.tree_map(lambda a: a[i], lps)
+                ck, cv = layer_ks[i], layer_vs[i]
+                Sc = ck.shape[2]
+                w = c.window_of(i)
+                cpos = pos % Sc                          # ring for local layers
+                klen = jnp.minimum(pos + 1, Sc)
+                attn, (ck, cv) = self._attention(
+                    lp, x, positions, 0, cache=(ck, cv), cache_pos=cpos,
+                    kv_len=klen)
+                x2 = x + attn
+                mlp, _ = self._mlp(lp, x2)
+                x = x2 + mlp
+                new_ks.append(ck)
+                new_vs.append(cv)
+            return x, (tuple(new_ks), tuple(new_vs))
+
+        x, (nk, nv) = lax.scan(step, x, (params["layers"], cache["k"], cache["v"]))
+        x = rms_norm(x, params["final_norm"], c.norm_eps)
+        head = params["embed"].T if c.tie_embeddings else params["lm_head"]
+        logits = (x[:, 0, :] @ head.astype(c.dtype)).astype(jnp.float32)
+        if c.final_softcap:
+            logits = c.final_softcap * jnp.tanh(logits / c.final_softcap)
+        new_cache = {"pos": pos + 1, "k": nk, "v": nv}
+        return logits, new_cache

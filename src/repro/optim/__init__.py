@@ -1,0 +1,1 @@
+from .adamw import AdamWConfig, init_opt_state, adamw_update, cosine_lr  # noqa: F401

@@ -1,0 +1,71 @@
+"""Lazy (touched-rows-only) AdamW for sparse embedding tables.
+
+Dense AdamW reads+writes every table row every step: 34x table bytes of HBM
+traffic (§Roofline's recsys memory term). Production recsys systems update
+only the rows touched by the batch (FBGEMM-style). This module does that in
+pure JAX with fixed shapes:
+
+  1. flatten this batch's (field, id) pairs -> sort -> segment-reduce dup
+     rows' grads (duplicates within a batch MUST be summed, not raced);
+  2. gather moments for <= B*F unique rows, run the Adam math on those rows;
+  3. scatter params/moments back (`mode=drop` for padding).
+
+Semantics = "lazy Adam": untouched rows keep stale moments and skip weight
+decay — the standard trade (TF LazyAdam, torch SparseAdam). With weight_decay
+= 0 and every row touched, it is bit-identical to dense AdamW (tested).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import AdamWConfig, cosine_lr
+
+
+def dedup_row_grads(flat_ids, grad_rows, n_rows: int):
+    """Sum duplicate rows' gradients.
+
+    flat_ids int32[N]; grad_rows f32[N, D] -> (uniq_ids int32[N] padded with
+    ``n_rows`` sentinel, uniq_grads f32[N, D], valid bool[N]).
+    """
+    N = flat_ids.shape[0]
+    order = jnp.argsort(flat_ids)
+    s_ids = flat_ids[order]
+    s_g = grad_rows[order]
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), s_ids[1:] != s_ids[:-1]])
+    seg = jnp.cumsum(is_start.astype(jnp.int32)) - 1          # [N]
+    uniq_g = jax.ops.segment_sum(s_g, seg, num_segments=N)    # [N, D]
+    uniq_ids = jnp.full((N,), n_rows, jnp.int32).at[seg].set(s_ids)
+    valid = jnp.arange(N) <= seg[-1]
+    uniq_ids = jnp.where(valid, uniq_ids, n_rows)
+    return uniq_ids, uniq_g, valid
+
+
+def sparse_table_update(cfg: AdamWConfig, table, grad_rows, flat_ids,
+                        mu, nu, step):
+    """Lazy-Adam update of ``table`` [R, D] at this batch's rows.
+
+    grad_rows f32[N, D] are d(loss)/d(gathered rows); flat_ids int32[N].
+    mu/nu f32[R, D]. Returns (table', mu', nu').
+    """
+    R, D = table.shape
+    uniq_ids, uniq_g, valid = dedup_row_grads(flat_ids, grad_rows, R)
+    idx = jnp.minimum(uniq_ids, R - 1)
+    lr = cosine_lr(cfg, step)
+    t = step.astype(jnp.float32)
+    b1c = 1 - cfg.b1 ** t
+    b2c = 1 - cfg.b2 ** t
+    mu_rows = mu[idx]
+    nu_rows = nu[idx]
+    g = uniq_g.astype(jnp.float32)
+    mu_new = cfg.b1 * mu_rows + (1 - cfg.b1) * g
+    nu_new = cfg.b2 * nu_rows + (1 - cfg.b2) * g * g
+    upd = (mu_new / b1c) / (jnp.sqrt(nu_new / b2c) + cfg.eps)
+    p_rows = table[idx].astype(jnp.float32)
+    p_new = p_rows - lr * (upd + cfg.weight_decay * p_rows)
+    # scatter back; sentinel ids land out of range -> dropped
+    table = table.at[uniq_ids].set(p_new.astype(table.dtype), mode="drop")
+    mu = mu.at[uniq_ids].set(mu_new, mode="drop")
+    nu = nu.at[uniq_ids].set(nu_new, mode="drop")
+    return table, mu, nu

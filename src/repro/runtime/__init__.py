@@ -1,0 +1,3 @@
+from .fault import (  # noqa: F401
+    StepMonitor, HeartbeatRegistry, ElasticPolicy, FaultInjector, TrainDriver,
+)

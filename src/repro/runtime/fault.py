@@ -1,0 +1,137 @@
+"""Fault tolerance & elasticity for 1000+-node runs (simulated, API-complete).
+
+Components a production launcher wires together:
+  * StepMonitor     — per-step wall-time EWMA; flags stragglers by z-score.
+  * HeartbeatRegistry — host liveness; a missed deadline marks the host dead.
+  * ElasticPolicy   — given surviving hosts, proposes the largest valid mesh
+                      (powers-of-two data axis, fixed model axis) to restart on.
+  * FaultInjector   — deterministic fault schedule for tests/drills.
+  * TrainDriver     — the restart loop: run -> fault -> restore latest ckpt ->
+                      (possibly smaller mesh) -> continue. Used by tests and
+                      launch/train.py --drill.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+
+class StepMonitor:
+    """EWMA step-time tracker with straggler z-score detection."""
+
+    def __init__(self, alpha: float = 0.1, z_threshold: float = 3.0,
+                 warmup: int = 5):
+        self.alpha = alpha
+        self.z = z_threshold
+        self.warmup = warmup
+        self.mean: Optional[float] = None
+        self.var: float = 0.0
+        self.n = 0
+        self.stragglers: list[tuple[int, float]] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.n += 1
+        if self.mean is None:
+            self.mean = dt
+            return False
+        is_straggler = False
+        if self.n > self.warmup and self.var > 0:
+            zscore = (dt - self.mean) / (self.var ** 0.5)
+            if zscore > self.z:
+                is_straggler = True
+                self.stragglers.append((step, dt))
+        delta = dt - self.mean
+        self.mean += self.alpha * delta
+        self.var = (1 - self.alpha) * (self.var + self.alpha * delta * delta)
+        return is_straggler
+
+
+class HeartbeatRegistry:
+    def __init__(self, timeout_s: float = 60.0, clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout_s
+        self.clock = clock
+        self.last: dict[int, float] = {}
+
+    def beat(self, host: int):
+        self.last[host] = self.clock()
+
+    def dead_hosts(self) -> list[int]:
+        now = self.clock()
+        return [h for h, t in self.last.items() if now - t > self.timeout]
+
+    def alive_hosts(self) -> list[int]:
+        dead = set(self.dead_hosts())
+        return [h for h in self.last if h not in dead]
+
+
+@dataclasses.dataclass
+class ElasticPolicy:
+    """Shrink the data axis to the largest power of two that fits the
+    surviving hosts; the model axis is fixed by the sharded state layout."""
+    chips_per_host: int
+    model_axis: int
+    min_data_axis: int = 1
+
+    def propose_mesh(self, n_alive_hosts: int) -> Optional[tuple[int, int]]:
+        chips = n_alive_hosts * self.chips_per_host
+        data = chips // self.model_axis
+        if data < self.min_data_axis:
+            return None
+        data = 1 << (data.bit_length() - 1)        # floor power of two
+        return (data, self.model_axis)
+
+
+class FaultInjector:
+    def __init__(self, fail_at_steps: list[int], kill_hosts: Optional[list[int]] = None):
+        self.fail_at = set(fail_at_steps)
+        self.kill_hosts = kill_hosts or []
+        self.fired: list[int] = []
+
+    def check(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.append(step)
+            raise RuntimeError(f"injected node failure at step {step} "
+                               f"(hosts {self.kill_hosts})")
+
+
+class TrainDriver:
+    """Checkpoint-restart loop around a step function.
+
+    step_fn(state, step) -> state;  save_fn(state, step);  restore_fn() ->
+    (state, step);  on_fault(step, error) -> optional remesh hook.
+    """
+
+    def __init__(self, step_fn, save_fn, restore_fn, *, ckpt_every: int = 50,
+                 max_restarts: int = 10, on_fault=None,
+                 monitor: Optional[StepMonitor] = None):
+        self.step_fn = step_fn
+        self.save_fn = save_fn
+        self.restore_fn = restore_fn
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.on_fault = on_fault
+        self.monitor = monitor or StepMonitor()
+        self.restarts = 0
+
+    def run(self, state, start_step: int, total_steps: int):
+        step = start_step
+        while step < total_steps:
+            try:
+                t0 = time.monotonic()
+                state = self.step_fn(state, step)
+                self.monitor.record(step, time.monotonic() - t0)
+                step += 1
+                if step % self.ckpt_every == 0:
+                    self.save_fn(state, step)
+            except RuntimeError as e:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                if self.on_fault is not None:
+                    self.on_fault(step, e)
+                state, step = self.restore_fn()
+        return state, step

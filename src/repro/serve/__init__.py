@@ -1,0 +1,2 @@
+from .qac import qac_serve_step, qac_serve_striped  # noqa: F401
+from .lm import prefill_step, make_decode_step  # noqa: F401

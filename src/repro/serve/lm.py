@@ -1,0 +1,46 @@
+"""LM serving steps: prefill (full forward) and KV-cache decode.
+
+These are the functions the dry-run lowers for ``prefill_*`` / ``decode_*`` /
+``long_*`` shapes. Long-context decode relies on GSPMD sequence-parallelism:
+the KV cache is sharded on its sequence axis over ``model``, so the decode
+attention becomes local partial-softmax + a tiny cross-shard reduction
+(distributed LSE merge) inserted by the partitioner.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import TransformerLM
+
+
+def prefill_step(model: TransformerLM, params, tokens):
+    """tokens int32[B, S] -> logits of the LAST position [B, V]."""
+    logits, _, _ = model.forward(params, tokens)
+    return logits[:, -1, :]
+
+
+def make_decode_step(model: TransformerLM):
+    """-> decode_step(params, cache, tokens[B]) -> (logits [B, V], cache)."""
+
+    def step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return step
+
+
+def greedy_generate(model: TransformerLM, params, prompt, max_new: int,
+                    max_len: int):
+    """Host loop: prefill via repeated decode (simple reference generator)."""
+    B, S = prompt.shape
+    cache = model.init_cache(B, max_len)
+    logits = None
+    for t in range(S):
+        logits, cache = model.decode_step(params, cache, prompt[:, t])
+    out = [jnp.argmax(logits, -1)]
+    for _ in range(max_new - 1):
+        logits, cache = model.decode_step(params, cache, out[-1])
+        out.append(jnp.argmax(logits, -1))
+    return jnp.stack(out, axis=1)

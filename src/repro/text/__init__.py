@@ -1,0 +1,1 @@
+from .synth import SynthLogConfig, generate_query_log, make_eval_queries  # noqa: F401

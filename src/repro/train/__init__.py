@@ -1,0 +1,4 @@
+from .steps import (  # noqa: F401
+    TrainState, make_lm_train_step, make_gnn_train_step, make_recsys_train_step,
+    init_train_state,
+)

@@ -1,0 +1,253 @@
+"""Distributed substrate: checkpointing, fault tolerance, compression,
+striped QAC serving, codecs, embedding bags, data pipelines."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import CheckpointManager, save_checkpoint, restore_checkpoint
+from repro.runtime import (StepMonitor, HeartbeatRegistry, ElasticPolicy,
+                           FaultInjector, TrainDriver)
+from repro.distributed.compression import compress, decompress, compress_tree, init_ef
+from repro.optim.adamw import AdamWConfig, init_opt_state, adamw_update
+
+
+# ------------------------------------------------------------- checkpointing
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 4), jnp.bfloat16), "d": jnp.int32(7)}}
+    save_checkpoint(str(tmp_path), 5, tree, {"note": "x"})
+    got, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.arange(10))
+    assert got["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_manager_retention_and_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=True)
+    tree = {"w": jnp.zeros((4,))}
+    for s in (10, 20, 30, 40):
+        mgr.save(s, {"w": jnp.full((4,), s, jnp.float32)})
+    mgr.wait()
+    assert mgr.latest_step() == 40
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [30, 40]
+    got, step = mgr.restore(tree)
+    assert step == 40 and float(got["w"][0]) == 40
+
+
+def test_checkpoint_restart_resumes_training(tmp_path):
+    """Full fault-tolerance drill: train, crash, restore, converge on."""
+    rng = jax.random.PRNGKey(0)
+    w_true = jnp.asarray([2.0, -1.0])
+    X = jax.random.normal(rng, (64, 2))
+    y = X @ w_true
+
+    def loss(w):
+        return jnp.mean((X @ w - y) ** 2)
+
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0, total_steps=200,
+                      clip_norm=0)
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    inject = FaultInjector(fail_at_steps=[25])
+
+    def step_fn(state, step):
+        inject.check(step)
+        params, opt = state
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(cfg, params, g, opt)
+        return (params, opt)
+
+    def save_fn(state, step):
+        mgr.save(step, {"params": state[0], "opt": state[1]})
+
+    template = {"params": jnp.zeros(2), "opt": init_opt_state(jnp.zeros(2))}
+
+    def restore_fn():
+        got, step = mgr.restore(template)
+        return (got["params"], got["opt"]), step
+
+    driver = TrainDriver(step_fn, save_fn, restore_fn, ckpt_every=10)
+    w0 = jnp.zeros(2)
+    (w, opt), step = driver.run((w0, init_opt_state(w0)), 0, 120)
+    assert step == 120
+    assert driver.restarts == 1
+    assert float(loss(w)) < 1e-2  # converged despite the crash
+
+
+# ------------------------------------------------------------- fault tolerance
+def test_step_monitor_flags_stragglers():
+    mon = StepMonitor(z_threshold=3.0, warmup=3)
+    for i in range(30):
+        mon.record(i, 0.1 + 0.001 * (i % 3))
+    assert not mon.stragglers
+    assert mon.record(30, 1.5)  # 15x slower -> straggler
+    assert mon.stragglers
+
+
+def test_heartbeat_and_elastic_policy():
+    t = [0.0]
+    hb = HeartbeatRegistry(timeout_s=10, clock=lambda: t[0])
+    for h in range(8):
+        hb.beat(h)
+    t[0] = 5.0
+    for h in range(6):
+        hb.beat(h)          # hosts 6,7 go silent
+    t[0] = 12.0
+    assert sorted(hb.dead_hosts()) == [6, 7]
+    pol = ElasticPolicy(chips_per_host=32, model_axis=16)
+    assert pol.propose_mesh(8) == (16, 16)     # full: 256 chips
+    assert pol.propose_mesh(6) == (8, 16)      # 192 chips -> 8x16=128 used
+    assert pol.propose_mesh(0) is None
+
+
+# ------------------------------------------------------------- compression
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_compression_error_feedback_bounded(seed):
+    rng = np.random.default_rng(seed % 2**32)
+    g = jnp.asarray(rng.normal(size=(64,)) * 10, jnp.float32)
+    q, scale, ef = compress(g)
+    err = np.abs(np.asarray(decompress(q, scale) + ef - g))
+    assert err.max() < 1e-4  # deq + residual reconstructs exactly (fp32)
+    assert np.abs(np.asarray(ef)).max() <= float(scale) * 0.5 + 1e-6
+
+
+def test_compression_error_feedback_accumulates_correctly():
+    """EF-SGD property: sum of dequantized grads -> sum of true grads."""
+    rng = np.random.default_rng(0)
+    gs = [jnp.asarray(rng.normal(size=(32,)), jnp.float32) for _ in range(50)]
+    ef = jnp.zeros((32,))
+    total_deq = jnp.zeros((32,))
+    for g in gs:
+        q, scale, ef = compress(g, ef)
+        total_deq = total_deq + decompress(q, scale)
+    total_true = sum(gs)
+    # residual is bounded by one quantization step
+    np.testing.assert_allclose(np.asarray(total_deq + ef),
+                               np.asarray(total_true), rtol=1e-4, atol=1e-4)
+
+
+def test_compress_tree_shapes():
+    params = {"a": jnp.ones((4, 4)), "b": jnp.ones((8,))}
+    ef = init_ef(params)
+    deq, ef2 = compress_tree(params, ef)
+    assert jax.tree_util.tree_structure(deq) == jax.tree_util.tree_structure(params)
+
+
+# ------------------------------------------------------------- striped QAC
+def test_striped_qac_matches_single_index():
+    from repro.text import SynthLogConfig, generate_query_log
+    from repro.core import build_qac_index, parse_queries
+    from repro.core.builder import build_corpus
+    from repro.core.striped import build_striped
+    from repro.serve.qac import qac_serve_step, qac_serve_striped
+
+    qs, sc = generate_query_log(SynthLogConfig(n_queries=600, vocab_size=150,
+                                               mean_term_chars=4.0, seed=9))
+    qidx, kept, _ = build_qac_index(qs, sc)
+    dictionary, rows, sc2, kept2 = build_corpus(qs, sc)
+    order = np.lexsort(tuple(rows[:, j] for j in range(rows.shape[1] - 1, -1, -1)) + (-sc2,))
+    d_of_row = np.empty(len(rows), dtype=np.int32)
+    d_of_row[order] = np.arange(len(rows), dtype=np.int32)
+    for n_stripes in (2, 4):
+        striped = build_striped(rows, d_of_row, dictionary.n_terms, n_stripes)
+        rng = np.random.default_rng(n_stripes)
+        partials = []
+        for qi in rng.integers(0, len(kept), 24):
+            toks = kept[qi].split()
+            cut = rng.integers(1, len(toks[-1]) + 1)
+            partials.append(" ".join(toks[:-1] + [toks[-1][:cut]]))
+        pids, plen, pok, suf, slen = parse_queries(qidx.dictionary, partials)
+        got = qac_serve_striped(striped, qidx.dictionary, pids, plen, suf, slen, k=10)
+        want = qac_serve_step(qidx, pids, plen, suf, slen, k=10)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------------- codecs
+@given(st.lists(st.integers(0, 10**6), min_size=1, max_size=200))
+@settings(max_examples=25, deadline=None)
+def test_ef_roundtrip(vals):
+    from repro.core.codecs import ef_encode, ef_decode
+    v = np.unique(np.asarray(vals, dtype=np.int64))
+    got = ef_decode(ef_encode(v))
+    np.testing.assert_array_equal(got, v)
+
+
+@given(st.lists(st.integers(0, 10**6), min_size=1, max_size=200))
+@settings(max_examples=25, deadline=None)
+def test_vbyte_roundtrip(vals):
+    from repro.core.codecs import vbyte_encode, vbyte_decode
+    v = np.unique(np.asarray(vals, dtype=np.int64))
+    got = vbyte_decode(vbyte_encode(v), len(v))
+    np.testing.assert_array_equal(got, v)
+
+
+# ------------------------------------------------------------- embedding bags
+def test_embedding_bag_padded_vs_csr():
+    from repro.models.recsys import embedding_bag, embedding_bag_csr
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(50, 8)), jnp.float32)
+    ids = rng.integers(0, 50, (4, 6)).astype(np.int32)
+    lens = np.array([6, 3, 1, 5])
+    mask = (np.arange(6)[None] < lens[:, None]).astype(np.float32)
+    padded = embedding_bag(table, jnp.asarray(ids), jnp.asarray(mask))
+    flat, seg = [], []
+    for i in range(4):
+        flat += ids[i, : lens[i]].tolist()
+        seg += [i] * lens[i]
+    csr = embedding_bag_csr(table, jnp.asarray(flat), jnp.asarray(seg), 4)
+    np.testing.assert_allclose(np.asarray(padded), np.asarray(csr), rtol=1e-6)
+
+
+# ------------------------------------------------------------- data pipelines
+def test_neighbor_sampler_validity():
+    from repro.data.graphs import random_graph, build_csr, neighbor_sample
+    src, dst = random_graph(500, 4000, seed=1)
+    indptr, indices = build_csr(src, dst, 500)
+    rng = np.random.default_rng(0)
+    seeds = rng.choice(500, 16, replace=False).astype(np.int32)
+    nodes, senders, receivers = neighbor_sample(indptr, indices, seeds, (5, 3), rng)
+    assert (nodes[:16] == seeds).all()
+    edge_set = set(zip(src.tolist(), dst.tolist()))
+    for s, r in zip(senders, receivers):
+        assert (int(nodes[s]), int(nodes[r])) in edge_set
+
+
+def test_lm_pipeline_shapes():
+    from repro.data.lm import TokenStream, lm_batches
+    stream = TokenStream.synthetic(vocab=100, n_docs=10, mean_len=128)
+    it = lm_batches(stream, batch=4, seq_len=16)
+    toks, tgts, mask = next(it)
+    assert toks.shape == (4, 16) and tgts.shape == (4, 16)
+    np.testing.assert_array_equal(toks[:, 1:], tgts[:, :-1])
+
+
+@given(st.integers(0, 10**6), st.sampled_from([2, 4, 8, 16]))
+@settings(max_examples=30, deadline=None)
+def test_butterfly_topk_merge_equals_global_topk(seed, n_shards):
+    """The §Perf butterfly merge (XOR-pair exchange, keep min-k) must equal
+    the global min-k after log2(S) rounds — simulated shard-by-shard here
+    exactly as serve/qac.py's ppermute loop computes it."""
+    k = 10
+    rng = np.random.default_rng(seed)
+    INF = 2**31 - 1
+    shard_vals = []
+    for s in range(n_shards):
+        n = rng.integers(0, 25)
+        v = np.sort(rng.choice(10**6, size=n, replace=False)).astype(np.int64)
+        shard_vals.append(np.pad(v[:k], (0, max(0, k - len(v[:k]))),
+                                 constant_values=INF))
+    cur = [np.array(v) for v in shard_vals]
+    for bit in range(n_shards.bit_length() - 1):
+        nxt = []
+        for i in range(n_shards):
+            both = np.concatenate([cur[i], cur[i ^ (1 << bit)]])
+            nxt.append(np.sort(both)[:k])
+        cur = nxt
+    want = np.sort(np.concatenate(shard_vals))[:k]
+    for i in range(n_shards):
+        np.testing.assert_array_equal(cur[i], want)

@@ -1,0 +1,25 @@
+"""Dry-run regression: one cell lowers+compiles on the 512-device mesh in a
+subprocess (XLA device-count flags must precede jax init)."""
+import json
+import os
+import subprocess
+import sys
+
+ROOT = "/root/repo" if os.path.exists("/root/repo/pyproject.toml") else os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_dryrun_single_cell_compiles():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "fm",
+         "--shape", "serve_p99", "--single-pod-only"],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=420,
+    )
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    rec = json.load(open(os.path.join(
+        ROOT, "src", "repro", "launch", "dryrun_results", "pod16x16",
+        "fm__serve_p99.json")))
+    assert rec["ok"] and rec["n_chips"] == 256
+    assert rec["collective_bytes"] > 0

@@ -1,0 +1,196 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps vs ref.py oracles."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.intersect.ops import conjunctive_scan
+from repro.kernels.intersect.ref import conjunctive_scan_ref
+from repro.kernels.rmq.ops import rmq_query
+from repro.kernels.flash_attention import flash_attention, flash_decode
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.fm_pairwise.ops import fm_pairwise
+from repro.kernels.fm_pairwise.ref import fm_pairwise_ref
+from repro.core.rmq import RangeMin, BLOCK
+
+INF = 2**31 - 1
+
+
+# ------------------------------------------------------------- intersect
+def _make_intersect_case(rng, B, T, P, L, M, universe):
+    cands = np.sort(rng.choice(universe, (B, T), replace=True), axis=1).astype(np.int32)
+    lists = np.full((B, P, L), INF, np.int32)
+    lens = rng.integers(0, L + 1, (B, P)).astype(np.int32)
+    for b in range(B):
+        for p in range(P):
+            vals = np.unique(rng.choice(universe, lens[b, p]))
+            # force some overlap with candidates
+            take = rng.integers(0, T, size=max(1, lens[b, p] // 2))
+            vals = np.unique(np.concatenate([vals, cands[b, take]]))[: lens[b, p]]
+            lens[b, p] = len(vals)
+            lists[b, p, : len(vals)] = np.sort(vals)
+    fwd = rng.integers(0, 50, (B, T, M)).astype(np.int32)
+    tlo = rng.integers(0, 40, B).astype(np.int32)
+    thi = (tlo + rng.integers(0, 15, B)).astype(np.int32)
+    return (jnp.asarray(cands), jnp.asarray(lists), jnp.asarray(lens),
+            jnp.asarray(fwd), jnp.asarray(tlo), jnp.asarray(thi))
+
+
+@pytest.mark.parametrize("B,T,P,L,M", [
+    (2, 128, 2, 64, 4), (3, 256, 4, 128, 8), (1, 128, 1, 16, 2),
+])
+def test_intersect_kernel_matches_ref(B, T, P, L, M):
+    rng = np.random.default_rng(B * 100 + T)
+    args = _make_intersect_case(rng, B, T, P, L, M, universe=500)
+    got = conjunctive_scan(*args, use_kernel=True, interpret=True)
+    want = conjunctive_scan_ref(*args)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------------- rmq
+@pytest.mark.parametrize("n,B", [(1000, 64), (40_000, 128)])
+def test_rmq_kernel_matches_numpy(n, B):
+    rng = np.random.default_rng(n)
+    vals = rng.integers(0, 1_000_000, n).astype(np.int32)
+    rm = RangeMin.build(vals)
+    p = rng.integers(0, n, B).astype(np.int32)
+    q = np.minimum(p + rng.integers(0, n, B), n - 1).astype(np.int32)
+    p, q = np.minimum(p, q), np.maximum(p, q)
+    pos, val = rmq_query(rm.values, rm.st_pos, jnp.asarray(p), jnp.asarray(q),
+                         use_kernel=True, interpret=True)
+    for i in range(B):
+        want = vals[p[i] : q[i] + 1].min()
+        assert int(val[i]) == want, i
+        assert vals[int(pos[i])] == want
+
+
+def test_rmq_kernel_matches_ref_path():
+    rng = np.random.default_rng(7)
+    vals = rng.integers(0, 10**6, 5000).astype(np.int32)
+    rm = RangeMin.build(vals)
+    p = rng.integers(0, 5000, 32).astype(np.int32)
+    q = np.minimum(p + rng.integers(0, 500, 32), 4999).astype(np.int32)
+    a = rmq_query(rm.values, rm.st_pos, jnp.asarray(p), jnp.asarray(q), use_kernel=True)
+    b = rmq_query(rm.values, rm.st_pos, jnp.asarray(p), jnp.asarray(q), use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+# ------------------------------------------------------------- flash attention
+@pytest.mark.parametrize("B,H,G,S,D,causal,window,softcap", [
+    (1, 4, 4, 256, 64, True, 0, 0.0),      # MHA causal
+    (2, 4, 2, 256, 64, True, 0, 0.0),      # GQA
+    (1, 4, 1, 384, 64, True, 128, 0.0),    # MQA + sliding window (gemma2 local)
+    (1, 2, 2, 256, 128, True, 0, 50.0),    # softcap (gemma2)
+    (1, 2, 2, 128, 64, False, 0, 0.0),     # bidirectional
+])
+def test_flash_attention_matches_ref(B, H, G, S, D, causal, window, softcap):
+    rng = np.random.default_rng(S + H)
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, G, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, G, S, D)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, use_kernel=True, interpret=True,
+                          block_q=128, block_k=128)
+    want = flash_attention_ref(q, k, v, causal=causal, window=window,
+                               softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), dtype)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), dtype)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), dtype)
+    got = flash_attention(q, k, v, use_kernel=True, interpret=True)
+    want = flash_attention_ref(q, k, v)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_decode_matches_full_attention():
+    """Decode with a partially-filled cache == full attention's last row."""
+    rng = np.random.default_rng(1)
+    B, H, G, Skv, D = 2, 4, 2, 512, 64
+    q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, G, Skv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, G, Skv, D)), jnp.float32)
+    kv_len = jnp.asarray([300, 512], jnp.int32)
+    got = flash_decode(q, k, v, kv_len, use_kernel=True, interpret=True)
+    want = flash_attention_ref(q[:, :, None, :], k, v, causal=True,
+                               kv_len=kv_len)[:, :, 0, :]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_window():
+    rng = np.random.default_rng(2)
+    B, H, G, Skv, D = 1, 2, 1, 256, 64
+    q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, G, Skv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, G, Skv, D)), jnp.float32)
+    kv_len = jnp.asarray([256], jnp.int32)
+    got = flash_decode(q, k, v, kv_len, window=64, use_kernel=True, interpret=True)
+    want = flash_attention_ref(q[:, :, None, :], k, v, causal=True, window=64,
+                               kv_len=kv_len)[:, :, 0, :]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------- fm pairwise
+@pytest.mark.parametrize("B,F,D,dtype", [
+    (256, 39, 16, jnp.float32), (512, 8, 64, jnp.float32),
+    (256, 39, 16, jnp.bfloat16),
+])
+def test_fm_pairwise_matches_ref(B, F, D, dtype):
+    rng = np.random.default_rng(B + F)
+    emb = jnp.asarray(rng.normal(size=(B, F, D)), dtype)
+    got = fm_pairwise(emb, use_kernel=True, interpret=True)
+    want = fm_pairwise_ref(emb)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_fm_pairwise_explicit_pairs():
+    """Sum-square trick == explicit sum over pairs."""
+    rng = np.random.default_rng(3)
+    emb = jnp.asarray(rng.normal(size=(8, 10, 6)), jnp.float32)
+    got = fm_pairwise(emb, use_kernel=True, interpret=True)
+    e = np.asarray(emb)
+    want = np.zeros(8)
+    for i in range(10):
+        for j in range(i + 1, 10):
+            want += (e[:, i] * e[:, j]).sum(-1)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- xla flash (scan)
+from repro.kernels.flash_attention.xla_flash import xla_flash_attention
+
+
+@pytest.mark.parametrize("causal,window,softcap,G", [
+    (True, 0, 0.0, 4), (True, 96, 0.0, 2), (False, 0, 30.0, 1),
+])
+def test_xla_flash_matches_ref(causal, window, softcap, G):
+    rng = np.random.default_rng(5)
+    B, H, S, D = 2, 4, 320, 32
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, G, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, G, S, D)), jnp.float32)
+    got = xla_flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, block_k=128)
+    want = flash_attention_ref(q, k, v, causal=causal, window=window,
+                               softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_xla_flash_grads_finite():
+    rng = np.random.default_rng(6)
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 16)), jnp.float32)
+    g = jax.grad(lambda a, b, c: xla_flash_attention(a, b, c, block_k=64).sum(),
+                 argnums=(0, 1, 2))(q, k, v)
+    for x in g:
+        assert np.isfinite(np.asarray(x)).all()
