@@ -1,9 +1,12 @@
 """Beyond-paper headline: batched QAC serving throughput (the TPU plan).
 
 Amortized us/query and QPS of the batched complete() at several batch sizes,
-plus the docid-striped distributed path on a local 1x{S} stripes loop —
-paper §1 reports 135k QPS @ 80 cores; this is the single-host CPU figure for
-the same algorithm vectorized.
+plus (ISSUE 1) a routed-vs-fused comparison: the class-routed frontend
+(serve/frontend.py) partitions each batch by query class and dispatches each
+sub-batch to only its engine, swept over class-skew mixes (100%/80%/50%
+single-term — paper §3.3 notes single-term queries dominate production
+traffic), and the docid-striped distributed path on a local 1x{S} stripes
+loop — paper §1 reports 135k QPS @ 80 cores.
 """
 from __future__ import annotations
 
@@ -15,13 +18,35 @@ from .common import bench_corpus, sample_eval_queries, timer, emit, QUICK
 from repro.core import parse_queries
 from repro.core.striped import build_striped
 from repro.serve.qac import qac_serve_step, qac_serve_striped
+from repro.serve.frontend import QACFrontend
+
+BATCHES = (64,) if QUICK else (64, 256, 1024)
+MIXES = (100, 80, 50)  # % single-term traffic
+
+
+def _class_mix_batch(kept, rng, B, pct_single):
+    """B partial queries, pct_single% single-term (lone partial token)."""
+    multis = [q for q in kept if len(q.split()) >= 2] or list(kept)
+    out = []
+    n_single = round(B * pct_single / 100)
+    while len(out) < n_single:
+        t = kept[rng.integers(0, len(kept))].split()[0]
+        out.append(t[: rng.integers(1, len(t) + 1)])
+    while len(out) < B:
+        toks = multis[rng.integers(0, len(multis))].split()
+        cut = rng.integers(1, len(toks[-1]) + 1)
+        out.append(" ".join(toks[:-1] + [toks[-1][:cut]]))
+    rng.shuffle(out)
+    return out
 
 
 def main():
     qidx, kept, host, rows, d_of_row = bench_corpus()
     buckets = sample_eval_queries(kept, 50, n_per_bucket=200)
     queries = [q for qs in buckets.values() for q in qs]
-    for B in ((64,) if QUICK else (64, 256, 1024)):
+
+    # -- fused baseline on the organic eval mix (historical headline) --------
+    for B in BATCHES:
         qs = (queries * (B // len(queries) + 1))[:B]
         pids, plen, pok, suf, slen = parse_queries(qidx.dictionary, qs)
         fn = jax.jit(lambda a, b, c, d: qac_serve_step(qidx, a, b, c, d, k=10))
@@ -30,6 +55,29 @@ def main():
                   repeats=3, warmup=0)
         emit(f"qac_serve_batch{B}", t / B * 1e6, f"qps={B/t:.0f}")
 
+    # -- routed vs fused over class-skew mixes (ISSUE 1 tentpole) ------------
+    rng = np.random.default_rng(123)
+    frontend = QACFrontend(qidx, k=10)
+    fused = jax.jit(lambda a, b, c, d: qac_serve_step(qidx, a, b, c, d, k=10))
+    for B in BATCHES:
+        for mix in MIXES:
+            qs = _class_mix_batch(kept, rng, B, mix)
+            pids, plen, pok, suf, slen = parse_queries(qidx.dictionary, qs)
+            got = np.asarray(frontend.complete(pids, plen, suf, slen))
+            want = np.asarray(fused(pids, plen, suf, slen))
+            assert np.array_equal(got, want), \
+                f"routed != fused at B={B} mix={mix}"
+            t_fused = timer(
+                lambda: fused(pids, plen, suf, slen).block_until_ready(),
+                repeats=5, warmup=1)
+            t_routed = timer(
+                lambda: np.asarray(frontend.complete(pids, plen, suf, slen)),
+                repeats=5, warmup=1)
+            emit(f"qac_routed_b{B}_single{mix}", t_routed / B * 1e6,
+                 f"fused_us={t_fused/B*1e6:.3f},speedup={t_fused/t_routed:.2f}x,"
+                 f"qps={B/t_routed:.0f}")
+
+    # -- striped distributed path (agreement check) --------------------------
     striped = build_striped(rows, d_of_row, qidx.dictionary.n_terms, 4)
     B = 64
     qs = (queries * (B // len(queries) + 1))[:B]

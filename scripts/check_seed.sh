@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Seed gate: catches jax import-drift and serving regressions before merge.
+#   1. tier-1 test suite (must collect all modules — zero ImportErrors);
+#   2. quick-mode serving benchmark (exercises the routed frontend, the fused
+#      fallback, their parity assert, and the striped path end-to-end).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== quick-mode serving benchmark =="
+BENCH_QUICK=1 python -m benchmarks.bench_qac_serve
+
+echo "check_seed: OK"

@@ -1,0 +1,65 @@
+"""jax version shims — pin repo behavior across jax API drift.
+
+Policy (ROADMAP "compat policy"): any jax symbol that has moved, been
+renamed, or changed its keyword surface between the releases we support is
+resolved HERE, once, at import time. Call sites never probe jax versions
+themselves; they import from ``repro.compat``. Known drift covered:
+
+  * ``shard_map``: top-level ``jax.shard_map`` (jax >= 0.5) vs
+    ``jax.experimental.shard_map.shard_map`` (<= 0.4.x), including the
+    ``check_vma`` (new) vs ``check_rep`` (old) keyword rename.
+  * Pallas TPU compiler params: ``pltpu.CompilerParams`` (new) vs
+    ``pltpu.TPUCompilerParams`` (old).
+
+Everything here is import-safe on CPU-only installs: Pallas is imported
+lazily so merely importing ``repro.compat`` never pulls in TPU machinery.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+__all__ = ["shard_map", "tpu_compiler_params", "HAS_NATIVE_SHARD_MAP"]
+
+
+def _resolve_shard_map():
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm  # jax <= 0.4.x
+        native = False
+    else:
+        native = True
+    params = inspect.signature(sm).parameters
+    check_kw = "check_vma" if "check_vma" in params else "check_rep"
+    return sm, check_kw, native
+
+
+_SHARD_MAP, _CHECK_KW, HAS_NATIVE_SHARD_MAP = _resolve_shard_map()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kwargs):
+    """``jax.shard_map`` with the modern keyword surface on every jax.
+
+    ``check_vma`` follows the new-jax name; on old jax it is forwarded as
+    ``check_rep`` (same semantics: disable the replication/varying-axis
+    checker, which rejects several of our collective-merge patterns).
+    """
+    kwargs[_CHECK_KW] = check_vma
+    return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+def tpu_compiler_params(**kwargs):
+    """Build Pallas-TPU compiler params across the TPUCompilerParams rename.
+
+    Accepts the modern field names (``dimension_semantics``, ``vmem_limit_bytes``,
+    ...); both classes share them. Imported lazily so CPU-only paths that never
+    launch a kernel don't pay for (or require) Pallas TPU internals.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams  # jax <= 0.4.x name
+    return cls(**kwargs)

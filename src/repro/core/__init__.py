@@ -9,6 +9,7 @@ from .search import (  # noqa: F401
     prefix_search_topk,
     conjunctive_multi,
     single_term_topk,
+    single_term_topk_bounded,
     complete_conjunctive,
 )
 from .builder import (  # noqa: F401

@@ -113,20 +113,11 @@ def conjunctive_multi(index: InvertedIndex, completions, prefix_ids,
 # --------------------------------------------------------------------------
 # conjunctive-search, single term (paper §3.3, RMQ over `minimal`)
 # --------------------------------------------------------------------------
-def single_term_topk(index: InvertedIndex, rmq_minimal: RangeMin,
-                     term_lo, term_hi, k: int):
-    """Top-k docids in the union of lists of terms in [term_lo, term_hi).
-
-    Dense-slot version of the paper's lazy-iterator heap: a slot is either a
-    `minimal`-range (kind 0) or a posting-list iterator (kind 1). An iterator
-    is instantiated only when its list's minimum is popped — the paper's key
-    saving. Runs 2k iterations with consecutive-duplicate suppression (a docid
-    may appear in several lists of the range).
-    """
-    iters = 2 * k
+def _single_term_state(rmq_minimal: RangeMin, term_lo, term_hi, k: int,
+                       iters: int):
+    """Initial dense-slot heap state for the single-term engine."""
     cap = 2 * iters + 1
     hi_incl = term_hi - 1
-
     pos0, val0 = rmq_minimal.query(term_lo, hi_incl)
     kind = jnp.zeros((cap,), jnp.int32)
     lo_a = jnp.zeros((cap,), jnp.int32).at[0].set(term_lo)
@@ -136,6 +127,13 @@ def single_term_topk(index: InvertedIndex, rmq_minimal: RangeMin,
         jnp.where(term_lo <= hi_incl, val0, INF_DOCID)
     )
     out = jnp.full((k,), INF_DOCID, jnp.int32)
+    return (kind, lo_a, hi_a, pos_a, val_a, out, jnp.int32(0), jnp.int32(1),
+            jnp.int32(-1))
+
+
+def _single_term_body(index: InvertedIndex, rmq_minimal: RangeMin, k: int):
+    """One pop of the dense-slot lazy-iterator heap, shared by the fixed-trip
+    (branchless fused / striped) and bounded-trip (routed frontend) engines."""
 
     def body(i, state):
         kind, lo_a, hi_a, pos_a, val_a, out, n_out, nf, prev = state
@@ -190,12 +188,51 @@ def single_term_topk(index: InvertedIndex, rmq_minimal: RangeMin,
         val_a = val_a.at[nf + 1].set(jnp.where(live, it_val, INF_DOCID))
         return kind, lo_a, hi_a, pos_a, val_a, out, n_out, nf + 2, prev
 
-    state = (kind, lo_a, hi_a, pos_a, val_a, out, jnp.int32(0), jnp.int32(1),
-             jnp.int32(-1))
-    state = lax.fori_loop(0, iters, body, state)
+    return body
+
+
+def single_term_topk(index: InvertedIndex, rmq_minimal: RangeMin,
+                     term_lo, term_hi, k: int):
+    """Top-k docids in the union of lists of terms in [term_lo, term_hi).
+
+    Dense-slot version of the paper's lazy-iterator heap: a slot is either a
+    `minimal`-range (kind 0) or a posting-list iterator (kind 1). An iterator
+    is instantiated only when its list's minimum is popped — the paper's key
+    saving. Runs 2k iterations with consecutive-duplicate suppression (a docid
+    may appear in several lists of the range). Branchless and fixed-trip, so
+    it composes with vmap/shard_map without data-dependent control flow.
+    """
+    iters = 2 * k
+    state = _single_term_state(rmq_minimal, term_lo, term_hi, k, iters)
+    state = lax.fori_loop(0, iters, _single_term_body(index, rmq_minimal, k),
+                          state)
     out = state[5]
     bad = term_lo >= term_hi
     return jnp.where(bad, INF_DOCID, out)
+
+
+def single_term_topk_bounded(index: InvertedIndex, rmq_minimal: RangeMin,
+                             term_lo, term_hi, k: int, trips: int):
+    """Single-term engine with a caller-chosen trip budget -> (out, done).
+
+    ``done`` is True iff the result equals the full 2k-trip engine's: either k
+    results were emitted (out is full; later pops are dropped) or the heap is
+    exhausted (every remaining slot is INF). 2k trips are only ever needed when
+    consecutive duplicate docids burn pops, so a short budget (k + slack)
+    almost always completes; the caller re-runs the full engine on the rare
+    incomplete lane. A short *fixed* fori_loop beats an early-exit while_loop
+    here: under vmap, while_loop's masked batching costs more per trip than
+    the trips it saves.
+    """
+    trips = min(trips, 2 * k)
+    state = _single_term_state(rmq_minimal, term_lo, term_hi, k, trips)
+    state = lax.fori_loop(0, trips, _single_term_body(index, rmq_minimal, k),
+                          state)
+    out, n_out, val_a = state[5], state[6], state[4]
+    bad = term_lo >= term_hi
+    # a full 2k budget IS the exact engine — never signal a fallback for it
+    done = bad | (n_out >= k) | (jnp.min(val_a) >= INF_DOCID) | (trips >= 2 * k)
+    return jnp.where(bad, INF_DOCID, out), done
 
 
 # --------------------------------------------------------------------------
@@ -204,7 +241,15 @@ def single_term_topk(index: InvertedIndex, rmq_minimal: RangeMin,
 def complete_conjunctive(index, completions, rmq_minimal,
                          prefix_ids, prefix_len, term_lo, term_hi, k: int,
                          **kw):
-    """Route multi-term vs single-term per query (branchless select)."""
+    """Fused per-query Complete(): run BOTH engines, select branchlessly.
+
+    This is the fallback for call sites that cannot partition the batch by
+    query class (vmap over mixed lanes, the shard_map striped path). Batched
+    serving should prefer ``serve.frontend.QACFrontend``, which classifies on
+    the host (``prefix_len > 0`` == multi-term) and dispatches each sub-batch
+    to only its engine — ``conjunctive_multi`` or ``single_term_topk`` — so
+    the other engine's work isn't computed and discarded.
+    """
     multi = conjunctive_multi(index, completions, prefix_ids, prefix_len,
                               term_lo, term_hi, k, **kw)
     single = single_term_topk(index, rmq_minimal, term_lo, term_hi, k)

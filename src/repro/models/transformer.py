@@ -19,8 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 
+from ..compat import shard_map
 from .layers import rms_norm, apply_rope, gated_act, dense_init, embed_init
 from ..distributed.sharding import shard_hint, get_mesh
 from ..kernels.flash_attention import flash_attention, flash_decode

@@ -1,2 +1,9 @@
-from .qac import qac_serve_step, qac_serve_striped  # noqa: F401
+from .qac import (  # noqa: F401
+    qac_serve_step,
+    qac_serve_striped,
+    serve_single_term,
+    serve_single_term_full,
+    serve_multi_term,
+)
+from .frontend import QACFrontend, route_classes  # noqa: F401
 from .lm import prefill_step, make_decode_step  # noqa: F401

@@ -1,0 +1,144 @@
+"""Class-routed batched QAC serving frontend (ISSUE 1 tentpole).
+
+The fused ``qac_serve_step`` pays for BOTH engines on every lane: the
+multi-term conjunctive scan and the single-term RMQ heap run for all B
+queries and a branchless select throws one result away. The paper (§3.3)
+notes single-term queries dominate production traffic, so that waste sits
+exactly on the hot path.
+
+This frontend routes on the host instead:
+
+  1. **partition** the incoming batch by query class — single-term
+     (``prefix_len == 0``) vs multi-term (``prefix_len > 0``);
+  2. **pad** each class sub-batch up to a power-of-two bucket size (cyclic
+     replication of real rows, so padding adds no new compile shapes and no
+     pathological lanes);
+  3. **dispatch** each sub-batch to *only* its engine under a per-
+     (engine, bucket, k) jit cache — single-term additionally runs a short
+     trip-budget engine with an exact full-budget fallback on the rare
+     incomplete lane (see ``single_term_topk_bounded``);
+  4. **scatter** results back into request order.
+
+Results are bit-identical to ``qac_serve_step`` (tests/test_serve_frontend.py
+checks element-for-element parity, including INF_DOCID padding and
+empty-suffix-range queries).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core.types import INF_DOCID
+from ..core.builder import QACIndex
+from .qac import serve_single_term, serve_single_term_full, serve_multi_term
+
+
+def route_classes(prefix_len):
+    """Host-side classification: (single_rows, multi_rows) index arrays."""
+    plen = np.asarray(prefix_len)
+    return np.flatnonzero(plen <= 0), np.flatnonzero(plen > 0)
+
+
+class QACFrontend:
+    """Batched QAC completion with host-side class routing.
+
+    One instance owns a jit cache keyed by (engine, bucket, k); reuse it
+    across requests so steady-state traffic never recompiles. ``trips`` is
+    the single-term pop budget (default k + 2); lanes that exhaust it fall
+    back to the exact 2k-trip engine for the whole sub-batch.
+    """
+
+    def __init__(self, qidx: QACIndex, *, k: int = 10, tile: int = 128,
+                 max_tiles: int = 4096, min_bucket: int = 8,
+                 trips: int | None = None):
+        self.qidx = qidx
+        self.k = k
+        self.tile = tile
+        self.max_tiles = max_tiles
+        self.min_bucket = min_bucket
+        self.trips = trips
+        self._cache = {}
+        self.stats = {"requests": 0, "single_queries": 0, "multi_queries": 0,
+                      "single_fallbacks": 0}
+
+    # -- jit cache ------------------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        return max(self.min_bucket, 1 << (n - 1).bit_length())
+
+    def _get(self, engine: str, bucket: int, k: int):
+        key = (engine, bucket, k)
+        fn = self._cache.get(key)
+        if fn is None:
+            if engine == "single":
+                def _single(suf, slen):
+                    out, done = serve_single_term(self.qidx, suf, slen, k=k,
+                                                  trips=self.trips)
+                    return out, jnp.all(done)   # scalar: one tiny host sync
+
+                fn = jax.jit(_single)
+            elif engine == "single_full":
+                fn = jax.jit(lambda suf, slen: serve_single_term_full(
+                    self.qidx, suf, slen, k=k))
+            elif engine == "multi":
+                fn = jax.jit(lambda pids, plen, suf, slen: serve_multi_term(
+                    self.qidx, pids, plen, suf, slen, k=k, tile=self.tile,
+                    max_tiles=self.max_tiles))
+            else:
+                raise ValueError(engine)
+            self._cache[key] = fn
+        return fn
+
+    # -- serving --------------------------------------------------------------
+    def _run_single(self, bucket: int, k: int, suf, slen):
+        res, all_done = self._get("single", bucket, k)(suf, slen)
+        if not bool(all_done):
+            # a lane needed more than `trips` pops (duplicate-docid run):
+            # recompute the sub-batch with the exact full-budget engine
+            self.stats["single_fallbacks"] += 1
+            res = self._get("single_full", bucket, k)(suf, slen)
+        return np.asarray(res)
+
+    def complete(self, prefix_ids, prefix_len, suffix_chars, suffix_len, *,
+                 k: int | None = None):
+        """Routed batched Complete(): -> host docids int32[B, k] (INF padded),
+        in the original request order.
+
+        Inputs may be device or host arrays. The result lives on the host (the
+        scatter-back is a host op and serving consumers read results there);
+        wrap in ``jnp.asarray`` if device residency is needed.
+        """
+        k = self.k if k is None else k
+        plen = np.asarray(prefix_len)
+        B = plen.shape[0]
+        single_rows, multi_rows = route_classes(plen)
+        self.stats["requests"] += 1
+        self.stats["single_queries"] += int(single_rows.size)
+        self.stats["multi_queries"] += int(multi_rows.size)
+
+        # class-pure batch already at a bucket size: dispatch inputs as-is
+        # (no host round-trip, no padding copies — the common production case
+        # of a class-batched upstream queue)
+        if single_rows.size == B and self._bucket(B) == B:
+            return self._run_single(B, k, suffix_chars, suffix_len)
+        if multi_rows.size == B and self._bucket(B) == B:
+            return np.asarray(self._get("multi", B, k)(
+                prefix_ids, plen, suffix_chars, suffix_len))
+
+        pids = np.asarray(prefix_ids)
+        suf = np.asarray(suffix_chars)
+        slen = np.asarray(suffix_len)
+        out = np.full((B, k), INF_DOCID, np.int32)
+
+        if single_rows.size:
+            pad = np.resize(single_rows, self._bucket(single_rows.size))
+            res = self._run_single(len(pad), k, suf[pad], slen[pad])
+            out[single_rows] = res[: single_rows.size]
+
+        if multi_rows.size:
+            pad = np.resize(multi_rows, self._bucket(multi_rows.size))
+            res = self._get("multi", len(pad), k)(
+                pids[pad], plen[pad], suf[pad], slen[pad])
+            out[multi_rows] = np.asarray(res)[: multi_rows.size]
+
+        return out

@@ -14,10 +14,12 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+from ..compat import shard_map
 
 from ..core.types import INF_DOCID
-from ..core.search import complete_conjunctive, conjunctive_multi, single_term_topk
+from ..core.search import (complete_conjunctive, conjunctive_multi,
+                           single_term_topk, single_term_topk_bounded)
 from ..core.striped import StripedQACIndex, local_index
 from ..core.builder import QACIndex
 from ..distributed.sharding import get_mesh
@@ -26,13 +28,63 @@ from ..distributed.sharding import get_mesh
 def qac_serve_step(qidx: QACIndex, prefix_ids, prefix_len, suffix_chars,
                    suffix_len, *, k: int = 10, tile: int = 128,
                    max_tiles: int = 4096):
-    """Single-index batched serve: -> docids int32[B, k] (INF padded)."""
+    """Fused single-index batched serve: -> docids int32[B, k] (INF padded).
+
+    Every lane pays for BOTH engines (branchless select). This is the
+    reference/fallback path; class-partitioned traffic should go through
+    ``serve.frontend.QACFrontend``, which dispatches each class to only its
+    engine via ``serve_single_term`` / ``serve_multi_term`` below.
+    """
     term_lo, term_hi = qidx.dictionary.locate_prefix(suffix_chars, suffix_len)
 
     def one(pids, plen, tl, th):
         return complete_conjunctive(
             qidx.index, qidx.completions, qidx.rmq_minimal,
             pids, plen, tl, th, k, tile=tile, max_tiles=max_tiles)
+
+    return jax.vmap(one)(prefix_ids, prefix_len, term_lo, term_hi)
+
+
+# -- split engines (class-pure batches; used by serve/frontend.py) ------------
+def serve_single_term(qidx: QACIndex, suffix_chars, suffix_len, *, k: int = 10,
+                      trips: int | None = None):
+    """Batched single-term serve (paper §3.3) -> (docids int32[B, k], done).
+
+    For a batch known to be 100% single-term (empty prefix). ``trips`` bounds
+    the heap pops per lane (default k + 2 covers everything but pathological
+    duplicate runs); ``done[b]`` is False where the budget was too small and
+    the caller must fall back to the full 2k-trip engine for exact results.
+    """
+    trips = (k + 2) if trips is None else trips
+    term_lo, term_hi = qidx.dictionary.locate_prefix(suffix_chars, suffix_len)
+
+    def one(tl, th):
+        return single_term_topk_bounded(qidx.index, qidx.rmq_minimal, tl, th,
+                                        k, trips)
+
+    return jax.vmap(one)(term_lo, term_hi)
+
+
+def serve_single_term_full(qidx: QACIndex, suffix_chars, suffix_len, *,
+                           k: int = 10):
+    """Batched single-term serve, full 2k-trip budget (always exact)."""
+    term_lo, term_hi = qidx.dictionary.locate_prefix(suffix_chars, suffix_len)
+
+    def one(tl, th):
+        return single_term_topk(qidx.index, qidx.rmq_minimal, tl, th, k)
+
+    return jax.vmap(one)(term_lo, term_hi)
+
+
+def serve_multi_term(qidx: QACIndex, prefix_ids, prefix_len, suffix_chars,
+                     suffix_len, *, k: int = 10, tile: int = 128,
+                     max_tiles: int = 4096):
+    """Batched conjunctive serve (Fig 5 Fwd) for a 100%-multi-term batch."""
+    term_lo, term_hi = qidx.dictionary.locate_prefix(suffix_chars, suffix_len)
+
+    def one(pids, plen, tl, th):
+        return conjunctive_multi(qidx.index, qidx.completions, pids, plen,
+                                 tl, th, k, tile=tile, max_tiles=max_tiles)
 
     return jax.vmap(one)(prefix_ids, prefix_len, term_lo, term_hi)
 

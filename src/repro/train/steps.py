@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+from ..compat import shard_map
 
 from ..optim.adamw import AdamWConfig, init_opt_state, adamw_update
 from ..distributed.compression import psum_compressed, init_ef

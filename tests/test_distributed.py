@@ -6,7 +6,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.ckpt import CheckpointManager, save_checkpoint, restore_checkpoint
 from repro.runtime import (StepMonitor, HeartbeatRegistry, ElasticPolicy,
@@ -200,7 +200,10 @@ def test_embedding_bag_padded_vs_csr():
         flat += ids[i, : lens[i]].tolist()
         seg += [i] * lens[i]
     csr = embedding_bag_csr(table, jnp.asarray(flat), jnp.asarray(seg), 4)
-    np.testing.assert_allclose(np.asarray(padded), np.asarray(csr), rtol=1e-6)
+    # masked-matmul vs segment_sum accumulate in different orders: one-ULP
+    # fp32 differences are expected, so allow a small absolute tolerance
+    np.testing.assert_allclose(np.asarray(padded), np.asarray(csr),
+                               rtol=1e-6, atol=1e-5)
 
 
 # ------------------------------------------------------------- data pipelines

@@ -1,0 +1,119 @@
+"""Routing parity: the class-routed frontend must equal the fused serve path
+element-for-element — including INF_DOCID padding, empty-suffix-range
+queries, odd batch sizes, and the bounded-engine fallback."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import build_qac_index, parse_queries, INF_DOCID
+from repro.serve import qac_serve_step, QACFrontend, route_classes
+from repro.text import SynthLogConfig, generate_query_log
+
+
+@pytest.fixture(scope="module")
+def built():
+    qs, sc = generate_query_log(SynthLogConfig(n_queries=600, vocab_size=150,
+                                               mean_term_chars=4.0, seed=5))
+    qidx, kept, _ = build_qac_index(qs, sc)
+    return qidx, kept
+
+
+def _mixed_batch(kept, rng, B, pct_single, pct_garbage=0):
+    """Random partial queries: pct_single% single-term, pct_garbage% with a
+    suffix matching no term (empty [term_lo, term_hi) range)."""
+    multis = [q for q in kept if len(q.split()) >= 2] or kept
+    out = []
+    for _ in range(B):
+        r = rng.integers(0, 100)
+        if r < pct_garbage:
+            out.append("zzzzzzqx" if rng.integers(0, 2) else
+                       kept[rng.integers(0, len(kept))].split()[0] + " zzzzzzqx")
+        elif r < pct_garbage + pct_single:
+            t = kept[rng.integers(0, len(kept))].split()[0]
+            out.append(t[: rng.integers(1, len(t) + 1)])
+        else:
+            toks = multis[rng.integers(0, len(multis))].split()
+            cut = rng.integers(1, len(toks[-1]) + 1)
+            out.append(" ".join(toks[:-1] + [toks[-1][:cut]]))
+    return out
+
+
+def _check_parity(qidx, batch, fe, k=10):
+    pids, plen, pok, suf, slen = parse_queries(qidx.dictionary, batch)
+    got = fe.complete(pids, plen, suf, slen, k=k)
+    want = qac_serve_step(qidx, pids, plen, suf, slen, k=k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    return np.asarray(got)
+
+
+def test_routed_equals_fused_mixed_batches(built):
+    qidx, kept = built
+    fe = QACFrontend(qidx, k=10)
+    rng = np.random.default_rng(0)
+    for B, pct in [(32, 50), (64, 80), (48, 20), (17, 50), (5, 60)]:
+        _check_parity(qidx, _mixed_batch(kept, rng, B, pct), fe)
+
+
+def test_routed_single_class_batches(built):
+    """Batches that exercise only one engine (the other is never dispatched)."""
+    qidx, kept = built
+    fe = QACFrontend(qidx, k=10)
+    rng = np.random.default_rng(1)
+    _check_parity(qidx, _mixed_batch(kept, rng, 32, 100), fe)
+    assert fe.stats["multi_queries"] == 0
+    _check_parity(qidx, _mixed_batch(kept, rng, 32, 0), fe)
+    _check_parity(qidx, _mixed_batch(kept, rng, 1, 100), fe)
+    _check_parity(qidx, _mixed_batch(kept, rng, 1, 0), fe)
+
+
+def test_routed_empty_suffix_range_pads_inf(built):
+    """Unmatched suffixes must yield all-INF rows, same as the fused path."""
+    qidx, kept = built
+    fe = QACFrontend(qidx, k=10)
+    rng = np.random.default_rng(2)
+    got = _check_parity(qidx, _mixed_batch(kept, rng, 40, 40, pct_garbage=30), fe)
+    assert (got == INF_DOCID).any(axis=1).any(), "expected some INF padding"
+    # a pure-garbage batch: every row all-INF on both paths
+    got = _check_parity(qidx, ["zzzzzzqx", "qzzzzzy zzzzzzqx"] * 4, fe)
+    assert (got == INF_DOCID).all()
+
+
+def test_routed_bounded_engine_fallback_is_exact(built):
+    """With a starvation trip budget the done-flag must trigger the full
+    2k-trip fallback and results must still match the fused path exactly."""
+    qidx, kept = built
+    fe = QACFrontend(qidx, k=10, trips=1)
+    rng = np.random.default_rng(3)
+    _check_parity(qidx, _mixed_batch(kept, rng, 32, 100), fe)
+    assert fe.stats["single_fallbacks"] >= 1
+
+
+def test_routed_jit_cache_reuse(built):
+    """Same class shapes on repeat calls must not grow the jit cache."""
+    qidx, kept = built
+    fe = QACFrontend(qidx, k=10)
+    rng = np.random.default_rng(4)
+    batch = _mixed_batch(kept, rng, 32, 50)
+    _check_parity(qidx, batch, fe)
+    n_entries = len(fe._cache)
+    for _ in range(3):
+        _check_parity(qidx, batch, fe)
+    assert len(fe._cache) == n_entries
+    # a different mix with the same bucketed class sizes also reuses the cache
+    plen = np.asarray(parse_queries(qidx.dictionary, batch)[1])
+    other = _mixed_batch(kept, rng, int((plen == 0).sum()), 100) + \
+        _mixed_batch(kept, rng, int((plen > 0).sum()), 0)
+    _check_parity(qidx, other, fe)
+    assert len(fe._cache) == n_entries
+
+
+def test_route_classes_partition(built):
+    qidx, kept = built
+    rng = np.random.default_rng(6)
+    batch = _mixed_batch(kept, rng, 30, 50)
+    pids, plen, pok, suf, slen = parse_queries(qidx.dictionary, batch)
+    single_rows, multi_rows = route_classes(plen)
+    merged = np.sort(np.concatenate([single_rows, multi_rows]))
+    np.testing.assert_array_equal(merged, np.arange(len(batch)))
+    assert (np.asarray(plen)[single_rows] == 0).all()
+    assert (np.asarray(plen)[multi_rows] > 0).all()
