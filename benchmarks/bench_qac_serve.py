@@ -7,17 +7,29 @@ sub-batch to only its engine, swept over class-skew mixes (100%/80%/50%
 single-term — paper §3.3 notes single-term queries dominate production
 traffic), and the docid-striped distributed path on a local 1x{S} stripes
 loop — paper §1 reports 135k QPS @ 80 cores.
+ISSUE 2 adds the batch-native vs vmap-of-scalar engine comparison (the
+serving hot loops now issue one batched RMQ / conjunctive tile per step)
+and dumps every number to BENCH_qac.json at the repo root.
 """
 from __future__ import annotations
+
+import os
+import sys
+
+if "--quick" in sys.argv:               # before .common reads BENCH_QUICK
+    os.environ["BENCH_QUICK"] = "1"
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .common import bench_corpus, sample_eval_queries, timer, emit, QUICK
+from .common import (bench_corpus, sample_eval_queries, timer, emit, QUICK,
+                     write_bench_json)
 from repro.core import parse_queries
 from repro.core.striped import build_striped
-from repro.serve.qac import qac_serve_step, qac_serve_striped
+from repro.serve.qac import (qac_serve_step, qac_serve_step_vmap,
+                             qac_serve_striped, serve_single_term,
+                             serve_single_term_vmap)
 from repro.serve.frontend import QACFrontend
 
 BATCHES = (64,) if QUICK else (64, 256, 1024)
@@ -77,6 +89,41 @@ def main():
                  f"fused_us={t_fused/B*1e6:.3f},speedup={t_fused/t_routed:.2f}x,"
                  f"qps={B/t_routed:.0f}")
 
+    # -- batch-native vs vmap-of-scalar engines (ISSUE 2 tentpole) -----------
+    # single-term is the production-dominant class (paper §3.3); B=256 is the
+    # acceptance point: batched >= 1.3x over vmap on the XLA ref path (CPU)
+    B = 256
+    singles = []
+    while len(singles) < B:
+        t = kept[rng.integers(0, len(kept))].split()[0]
+        singles.append(t[: rng.integers(1, len(t) + 1)])
+    _, _, _, suf, slen = parse_queries(qidx.dictionary, singles)
+    f_vmap = jax.jit(lambda c, d: serve_single_term_vmap(qidx, c, d, k=10)[0])
+    f_bat = jax.jit(lambda c, d: serve_single_term(qidx, c, d, k=10)[0])
+    np.testing.assert_array_equal(np.asarray(f_vmap(suf, slen)),
+                                  np.asarray(f_bat(suf, slen)))
+    t_v = timer(lambda: f_vmap(suf, slen).block_until_ready(), repeats=7)
+    t_b = timer(lambda: f_bat(suf, slen).block_until_ready(), repeats=7)
+    emit(f"qac_single_engine_vmap_b{B}", t_v / B * 1e6, f"qps={B/t_v:.0f}")
+    emit(f"qac_single_engine_batched_b{B}", t_b / B * 1e6,
+         f"qps={B/t_b:.0f},speedup={t_v/t_b:.2f}x")
+
+    # fused path, mixed traffic: batched vs vmap (same B)
+    qs = (queries * (B // len(queries) + 1))[:B]
+    pids, plen, pok, sufm, slenm = parse_queries(qidx.dictionary, qs)
+    g_vmap = jax.jit(lambda a, b, c, d: qac_serve_step_vmap(
+        qidx, a, b, c, d, k=10))
+    g_bat = jax.jit(lambda a, b, c, d: qac_serve_step(qidx, a, b, c, d, k=10))
+    np.testing.assert_array_equal(np.asarray(g_vmap(pids, plen, sufm, slenm)),
+                                  np.asarray(g_bat(pids, plen, sufm, slenm)))
+    t_v = timer(lambda: g_vmap(pids, plen, sufm, slenm).block_until_ready(),
+                repeats=5)
+    t_b = timer(lambda: g_bat(pids, plen, sufm, slenm).block_until_ready(),
+                repeats=5)
+    emit(f"qac_fused_engine_vmap_b{B}", t_v / B * 1e6, f"qps={B/t_v:.0f}")
+    emit(f"qac_fused_engine_batched_b{B}", t_b / B * 1e6,
+         f"qps={B/t_b:.0f},speedup={t_v/t_b:.2f}x")
+
     # -- striped distributed path (agreement check) --------------------------
     striped = build_striped(rows, d_of_row, qidx.dictionary.n_terms, 4)
     B = 64
@@ -86,6 +133,8 @@ def main():
     want = qac_serve_step(qidx, pids, plen, suf, slen, k=10)
     agree = float(np.mean(np.asarray(got) == np.asarray(want)))
     emit("qac_striped_agreement", agree * 100, "pct_identical_to_single_index")
+
+    write_bench_json()
 
 
 if __name__ == "__main__":

@@ -51,5 +51,39 @@ def sample_eval_queries(kept, retain_pct: int, n_per_bucket: int = 50, seed=7):
     return make_eval_queries(list(kept), rng, n_per_bucket, retain_pct)
 
 
+# every emit() lands here so runners can dump a machine-readable snapshot;
+# keyed by benchmark name, value is us_per_call (see write_bench_json)
+RESULTS: dict[str, float] = {}
+
+
 def emit(name: str, us_per_call: float, derived: str = ""):
+    RESULTS[name] = float(us_per_call)
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def write_bench_json(path: str | None = None) -> str:
+    """Dump all emitted results as {name: us_per_call} JSON at the repo root.
+
+    The bench trajectory (BENCH_qac.json) is the machine-readable record the
+    perf gate and future PRs diff against; every ``benchmarks.run`` /
+    ``bench_qac_serve`` invocation refreshes its own entries and keeps the
+    rest (so ``--only`` runs don't clobber the other modules' numbers).
+    """
+    import json
+
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__), "..", "BENCH_qac.json")
+    path = os.path.abspath(path)
+    merged = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f)
+        except (ValueError, OSError):
+            merged = {}
+    merged.update(RESULTS)
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# bench json: {path}", flush=True)
+    return path

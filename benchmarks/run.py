@@ -50,6 +50,10 @@ def main() -> None:
         except Exception:
             failures += 1
             print(f"# {mod} FAILED:\n{traceback.format_exc()}", flush=True)
+    from benchmarks.common import RESULTS, write_bench_json
+
+    if RESULTS:
+        write_bench_json()
     if failures:
         sys.exit(1)
 

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Seed gate: catches jax import-drift and serving regressions before merge.
 #   1. tier-1 test suite (must collect all modules — zero ImportErrors);
-#   2. quick-mode serving benchmark (exercises the routed frontend, the fused
-#      fallback, their parity assert, and the striped path end-to-end).
+#   2. quick-mode serving benchmark (exercises the batch-native engines, the
+#      routed frontend, the fused fallback, their parity asserts, and the
+#      striped path end-to-end; writes the BENCH_qac.json snapshot).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -14,4 +15,5 @@ python -m pytest -x -q
 echo "== quick-mode serving benchmark =="
 BENCH_QUICK=1 python -m benchmarks.bench_qac_serve
 
+echo "bench json: $(pwd)/BENCH_qac.json"
 echo "check_seed: OK"

@@ -20,7 +20,8 @@ import inspect
 
 import jax
 
-__all__ = ["shard_map", "tpu_compiler_params", "HAS_NATIVE_SHARD_MAP"]
+__all__ = ["shard_map", "tpu_compiler_params", "HAS_NATIVE_SHARD_MAP",
+           "is_tpu_backend", "pallas_interpret_default", "default_use_kernel"]
 
 
 def _resolve_shard_map():
@@ -48,6 +49,36 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kwargs):
     kwargs[_CHECK_KW] = check_vma
     return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       **kwargs)
+
+
+def is_tpu_backend() -> bool:
+    """True when the default jax backend is a TPU."""
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:  # no backend at all (e.g. sandboxed import)
+        return False
+
+
+def pallas_interpret_default() -> bool:
+    """Platform-aware ``interpret`` default for Pallas kernels.
+
+    On TPU the kernels lower for real; everywhere else (CPU/GPU test rigs)
+    they run in interpret mode so the same call sites stay portable. Call
+    sites take ``interpret: bool | None = None`` and resolve None here —
+    never hardcode ``interpret=True``.
+    """
+    return not is_tpu_backend()
+
+
+def default_use_kernel() -> bool:
+    """Kernel-routing policy for the serving engines (ROADMAP PR 2).
+
+    Pallas kernels are the fast path only where they lower natively (TPU);
+    the XLA reference formulations win on CPU/GPU, where interpret-mode
+    Pallas would be orders of magnitude slower. Serving call sites take
+    ``use_kernel: bool | None = None`` and resolve None here.
+    """
+    return is_tpu_backend()
 
 
 def tpu_compiler_params(**kwargs):

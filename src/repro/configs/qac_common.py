@@ -14,7 +14,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .base import Cell, Lowerable, batch_axes, ns, replicated, sds
+from ..compat import default_use_kernel
 from ..core.types import MAX_TERMS, MAX_TERM_CHARS
+from ..core.rmq import IB_LEVELS
 from ..core.striped import StripedQACIndex
 from ..core.dictionary import TermDictionary
 from ..core.strings import n_chunks
@@ -33,6 +35,9 @@ class QACArch:
     n_terms: int = 1_000_000
     postings_per_comp: float = 3.1
     k: int = 10
+    # kernel-routing toggle for the batched engines: None resolves
+    # platform-aware (Pallas RMQ on TPU, XLA reference elsewhere)
+    use_kernel: bool | None = None
 
     family = "qac"
 
@@ -58,6 +63,7 @@ class QACArch:
             fwd_nterms=sds((S, n_loc), jnp.int32),
             rmq_values=sds((S, n_pad), jnp.int32),
             rmq_st=sds((S, levels, nb), jnp.int32),
+            rmq_ib=sds((S, IB_LEVELS, n_pad), jnp.int8),
             n_stripes=S, n_terms=V, n_local_docs=n_loc, postings_pad=p_pad,
             max_terms=M, rmq_levels=levels, rmq_blocks=nb,
         )
@@ -87,11 +93,14 @@ class QACArch:
         q_sh = tuple(ns(mesh, bax, *([None] * (len(x.shape) - 1)))
                      for x in q_specs)
         k = self.k
+        use_kernel = (default_use_kernel() if self.use_kernel is None
+                      else self.use_kernel)
 
         def fn(striped, dictionary, pids, plen, schars, slen):
             # §Perf it1 winner: butterfly merge (k·log2(S) vs k·S wire ints)
             return qac_serve_striped(striped, dictionary, pids, plen, schars,
-                                     slen, k=k, mesh=mesh, merge="butterfly")
+                                     slen, k=k, mesh=mesh, merge="butterfly",
+                                     use_kernel=use_kernel)
 
         # "model flops": integer comparisons dominate; report probe count
         probes = B * (MAX_TERMS * 31 + k * 4)

@@ -3,14 +3,18 @@ from .types import PAD_TERM, INF_DOCID, MAX_TERMS, MAX_TERM_CHARS  # noqa: F401
 from .dictionary import TermDictionary  # noqa: F401
 from .fc import FrontCodedStore  # noqa: F401
 from .completions import Completions  # noqa: F401
-from .rmq import RangeMin, topk_in_range  # noqa: F401
+from .rmq import RangeMin, topk_in_range, topk_in_range_batch  # noqa: F401
 from .inverted_index import InvertedIndex  # noqa: F401
 from .search import (  # noqa: F401
     prefix_search_topk,
     conjunctive_multi,
+    conjunctive_multi_batch,
     single_term_topk,
+    single_term_topk_batch,
     single_term_topk_bounded,
+    single_term_topk_bounded_batch,
     complete_conjunctive,
+    complete_conjunctive_batch,
 )
 from .builder import (  # noqa: F401
     QACIndex,

@@ -24,12 +24,44 @@ from jax import lax
 from .types import INF_DOCID, pytree_dataclass
 
 BLOCK = 128
+IB_LEVELS = 7            # in-block windows 2^1 .. 2^7 (= BLOCK)
+
+
+def build_inblock_table(vp: np.ndarray) -> np.ndarray:
+    """int8[IB_LEVELS, n_pad] leftmost-argmin offsets of in-block windows.
+
+    ``ib[j-1, i]`` is the offset (relative to i) of the leftmost minimum of
+    ``vp[i : i + 2^j]`` clipped to i's 128-block. Two overlapping windows at
+    level floor(log2(len)) cover any in-block range [lo, hi], turning the
+    batched engines' partial-block scans into four scalar gathers — the
+    gather/masked-reduction pass of the batch-native query (ROADMAP PR 2).
+    Level 0 (window length 1, offset 0) is implicit.
+    """
+    n_pad = len(vp)
+    nb = n_pad // BLOCK
+    v = vp.reshape(nb, BLOCK).astype(np.int64)
+    lane = np.arange(BLOCK)
+    cur = np.zeros((nb, BLOCK), np.int32)
+    ib = np.zeros((IB_LEVELS, nb, BLOCK), np.int8)
+    for j in range(1, IB_LEVELS + 1):
+        half = 1 << (j - 1)
+        other_i = np.minimum(lane + half, BLOCK - 1)
+        abs1 = lane[None, :] + cur
+        abs2 = other_i[None, :] + cur[:, other_i]
+        cross = (lane + half) > (BLOCK - 1)
+        take2 = (np.take_along_axis(v, abs2, 1)
+                 < np.take_along_axis(v, abs1, 1)) & ~cross[None, :]
+        absm = np.where(take2, abs2, abs1)
+        cur = (absm - lane[None, :]).astype(np.int32)
+        ib[j - 1] = cur.astype(np.int8)
+    return ib.reshape(IB_LEVELS, n_pad)
 
 
 @pytree_dataclass(meta_fields=("n", "n_blocks", "levels"))
 class RangeMin:
     values: jnp.ndarray      # int32[n_pad] (INF padded)
     st_pos: jnp.ndarray      # int32[levels, n_blocks]: global argmin positions
+    ib: jnp.ndarray          # int8[IB_LEVELS, n_pad]: in-block window argmins
     n: int
     n_blocks: int
     levels: int
@@ -57,6 +89,7 @@ class RangeMin:
         return RangeMin(
             values=jnp.asarray(vp.astype(np.int32)),
             st_pos=jnp.asarray(st),
+            ib=jnp.asarray(build_inblock_table(vp)),
             n=n,
             n_blocks=nb,
             levels=levels,
@@ -105,8 +138,101 @@ class RangeMin:
         best = jnp.argmin(val)
         return pos[best].astype(jnp.int32), val[best].astype(jnp.int32)
 
+    # -- natively batched query (the serving hot path, ROADMAP PR 2) ----------
+    def query_batch(self, p, q, *, use_kernel: bool = False,
+                    interpret: bool | None = None):
+        """Batched argmin over values[p[i]..q[i]] -> (pos int32[B], val int32[B]).
+
+        Contract vs the scalar :meth:`query` under vmap: ``val`` is
+        bit-identical always; ``pos`` is bit-identical whenever
+        ``val < INF_DOCID`` (for empty/invalid ranges the two formulations
+        return different — and equally meaningless — positions; no engine
+        reads ``pos`` of an INF pop).
+
+        ``use_kernel=True`` dispatches to the Pallas kernel
+        (``kernels.rmq.ops.rmq_query``); the default is the XLA reference
+        formulation: both partial blocks resolve via two overlapping in-block
+        windows (four ``ib`` + four ``values`` gathers), the middle via the
+        block-level sparse table — one fused gather per source array, no
+        per-lane ``dynamic_slice`` scans.
+        """
+        n = self.n
+        p = jnp.clip(p, 0, max(n - 1, 0)).astype(jnp.int32)
+        qc = jnp.clip(q, 0, max(n - 1, 0)).astype(jnp.int32)
+        invalid = (p > qc) | (n == 0)
+        if use_kernel:
+            from ..kernels.rmq.ops import rmq_query
+
+            B = p.shape[0]
+            pad = (-B) % BLOCK if B > BLOCK else 0
+            pk = jnp.pad(p, (0, pad)) if pad else p
+            qk = jnp.pad(qc, (0, pad)) if pad else qc
+            pos, val = rmq_query(self.values, self.st_pos, pk, qk,
+                                 use_kernel=True, interpret=interpret)
+            pos, val = pos[:B], val[:B]
+            return (pos.astype(jnp.int32),
+                    jnp.where(invalid, INF_DOCID, val).astype(jnp.int32))
+
+        n_pad = self.values.shape[0]
+        bp, bq = p // BLOCK, qc // BLOCK
+        same = bp == bq
+        # partial-block candidates: c1 over [p, same ? q : blockend(bp)],
+        # c2 over [blockstart(bq), q] — each as two overlapping windows
+        lo1 = p
+        hi1 = jnp.maximum(jnp.where(same, qc, bp * BLOCK + (BLOCK - 1)), p)
+        lo2, hi2 = bq * BLOCK, qc
+        j1 = 31 - lax.clz(jnp.maximum(hi1 - lo1 + 1, 1))
+        j2 = 31 - lax.clz(jnp.maximum(hi2 - lo2 + 1, 1))
+        s1 = hi1 - (1 << j1) + 1
+        s2 = hi2 - (1 << j2) + 1
+        ib_flat = self.ib.reshape(-1)
+        ib_idx = jnp.concatenate([
+            jnp.maximum(j1 - 1, 0) * n_pad + lo1,
+            jnp.maximum(j1 - 1, 0) * n_pad + s1,
+            jnp.maximum(j2 - 1, 0) * n_pad + lo2,
+            jnp.maximum(j2 - 1, 0) * n_pad + s2,
+        ])
+        offs = jnp.where(jnp.concatenate([j1, j1, j2, j2]) == 0, 0,
+                         ib_flat[ib_idx].astype(jnp.int32))
+        pos_w = jnp.concatenate([lo1, s1, lo2, s2]) + offs        # [4B]
+        # middle candidates c3/c4: block-level sparse table
+        cnt = bq - bp - 1
+        has_mid = cnt > 0
+        jm = jnp.where(has_mid, 31 - lax.clz(jnp.maximum(cnt, 1)), 0)
+        jc = jnp.minimum(jm, self.levels - 1)
+        lo_b = jnp.minimum(bp + 1, self.n_blocks - 1)
+        hi_b = jnp.clip(bq - (1 << jc), 0, self.n_blocks - 1)
+        st_flat = self.st_pos.reshape(-1)
+        pos_st = st_flat[jnp.concatenate([jc * self.n_blocks + lo_b,
+                                          jc * self.n_blocks + hi_b])]
+        B = p.shape[0]
+        vals6 = self.values[jnp.concatenate([pos_w, pos_st])]     # one gather
+        v1a, v1b = vals6[:B], vals6[B:2 * B]
+        v2a, v2b = vals6[2 * B:3 * B], vals6[3 * B:4 * B]
+        c3_val, c4_val = vals6[4 * B:5 * B], vals6[5 * B:]
+        p1a, p1b = pos_w[:B], pos_w[B:2 * B]
+        p2a, p2b = pos_w[2 * B:3 * B], pos_w[3 * B:]
+        c3_pos, c4_pos = pos_st[:B], pos_st[B:]
+        # window-pair combine (strict <, prefer the left window) keeps the
+        # leftmost argmin — identical to the scalar masked-lane argmin
+        c1_pos = jnp.where(v1b < v1a, p1b, p1a)
+        c1_val = jnp.minimum(v1a, v1b)
+        c2_pos = jnp.where(v2b < v2a, p2b, p2a)
+        c2_val = jnp.where(same, INF_DOCID, jnp.minimum(v2a, v2b))
+        c3_val = jnp.where(has_mid, c3_val, INF_DOCID)
+        c4_val = jnp.where(has_mid, c4_val, INF_DOCID)
+        # 4-way first-min tournament == argmin([c1..c4]) with low-index ties
+        p12 = jnp.where(c2_val < c1_val, c2_pos, c1_pos)
+        v12 = jnp.minimum(c1_val, c2_val)
+        p34 = jnp.where(c4_val < c3_val, c4_pos, c3_pos)
+        v34 = jnp.minimum(c3_val, c4_val)
+        pos = jnp.where(v34 < v12, p34, p12)
+        val = jnp.where(invalid, INF_DOCID, jnp.minimum(v12, v34))
+        return pos.astype(jnp.int32), val.astype(jnp.int32)
+
     def space_bytes(self) -> int:
-        return int(self.st_pos.nbytes)  # values are shared with the owner
+        # values are shared with the owner
+        return int(self.st_pos.nbytes + self.ib.nbytes)
 
 
 def topk_in_range(rmq: RangeMin, p, q, k: int):
@@ -151,6 +277,64 @@ def topk_in_range(rmq: RangeMin, p, q, k: int):
         slot_hi = slot_hi.at[i + 1].set(r_hi)
         slot_pos = slot_pos.at[i + 1].set(rpos)
         slot_val = slot_val.at[i + 1].set(rval)
+        return slot_lo, slot_hi, slot_pos, slot_val, out_v, out_p
+
+    state = (slot_lo, slot_hi, slot_pos, slot_val, out_v, out_p)
+    state = lax.fori_loop(0, k, body, state)
+    return state[4], state[5]
+
+
+def topk_in_range_batch(rmq: RangeMin, p, q, k: int, *,
+                        use_kernel: bool = False,
+                        interpret: bool | None = None):
+    """Batch-native :func:`topk_in_range`: p, q int32[B] half-open ranges.
+
+    Returns (vals int32[B, k], pos int32[B, k]), bit-identical to
+    ``vmap(topk_in_range)``. Each pop issues ONE batched RMQ over the 2B
+    left/right split subranges of all lanes instead of 2B scalar queries
+    under vmap (ISSUE 2 tentpole).
+    """
+    B = p.shape[0]
+    rows = jnp.arange(B)
+    qi = q - 1
+    pos0, val0 = rmq.query_batch(p, qi, use_kernel=use_kernel,
+                                 interpret=interpret)
+    K = k + 1
+    slot_lo = jnp.zeros((B, K), jnp.int32).at[:, 0].set(p)
+    slot_hi = jnp.full((B, K), -1, jnp.int32).at[:, 0].set(qi)
+    slot_pos = jnp.zeros((B, K), jnp.int32).at[:, 0].set(pos0)
+    slot_val = jnp.full((B, K), INF_DOCID, jnp.int32).at[:, 0].set(
+        jnp.where(p <= qi, val0, INF_DOCID))
+    out_v = jnp.full((B, k), INF_DOCID, jnp.int32)
+    out_p = jnp.full((B, k), -1, jnp.int32)
+
+    def body(i, state):
+        slot_lo, slot_hi, slot_pos, slot_val, out_v, out_p = state
+        best = jnp.argmin(slot_val, axis=1)
+        bval = slot_val[rows, best]
+        found = bval < INF_DOCID
+        out_v = out_v.at[:, i].set(bval)
+        out_p = out_p.at[:, i].set(jnp.where(found, slot_pos[rows, best], -1))
+        lo = slot_lo[rows, best]
+        hi = slot_hi[rows, best]
+        pos = slot_pos[rows, best]
+        l_lo, l_hi = lo, pos - 1
+        r_lo, r_hi = pos + 1, hi
+        pos2, val2 = rmq.query_batch(jnp.concatenate([l_lo, r_lo]),
+                                     jnp.concatenate([l_hi, r_hi]),
+                                     use_kernel=use_kernel,
+                                     interpret=interpret)
+        lval = jnp.where((l_lo <= l_hi) & found, val2[:B], INF_DOCID)
+        rval = jnp.where((r_lo <= r_hi) & found, val2[B:], INF_DOCID)
+        # left subrange replaces the popped slot; right takes fresh slot i+1
+        slot_lo = slot_lo.at[rows, best].set(l_lo)
+        slot_hi = slot_hi.at[rows, best].set(l_hi)
+        slot_pos = slot_pos.at[rows, best].set(pos2[:B])
+        slot_val = slot_val.at[rows, best].set(lval)
+        slot_lo = slot_lo.at[:, i + 1].set(r_lo)
+        slot_hi = slot_hi.at[:, i + 1].set(r_hi)
+        slot_pos = slot_pos.at[:, i + 1].set(pos2[B:])
+        slot_val = slot_val.at[:, i + 1].set(rval)
         return slot_lo, slot_hi, slot_pos, slot_val, out_v, out_p
 
     state = (slot_lo, slot_hi, slot_pos, slot_val, out_v, out_p)

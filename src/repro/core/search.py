@@ -11,7 +11,11 @@ Three device-side engines:
     ``minimal`` array with lazily instantiated list iterators, as a dense-slot
     loop (no heap). Single-term queries are the most frequent in production.
 
-All functions are per-query; ``jax.vmap`` them for batches (see serve/qac.py).
+The per-query functions (``jax.vmap`` them for batches) are the parity
+reference; the serving hot path uses the batch-native ``*_batch`` engines
+below, whose inner loops issue ONE batched RMQ / conjunctive-scan per step
+across all B lanes and can route through the Pallas kernels
+(``kernels/rmq``, ``kernels/intersect``) — ISSUE 2 tentpole.
 Results are docids, ascending == best-score-first; INF_DOCID pads.
 """
 from __future__ import annotations
@@ -28,6 +32,8 @@ from .rmq import RangeMin, topk_in_range
 from .completions import Completions
 from .inverted_index import InvertedIndex
 from .dictionary import TermDictionary
+
+INT32_MAX = jnp.iinfo(jnp.int32).max
 
 
 # --------------------------------------------------------------------------
@@ -254,3 +260,286 @@ def complete_conjunctive(index, completions, rmq_minimal,
                               term_lo, term_hi, k, **kw)
     single = single_term_topk(index, rmq_minimal, term_lo, term_hi, k)
     return jnp.where(prefix_len > 0, multi, single)
+
+
+# ==========================================================================
+# Batch-native engines (ISSUE 2 tentpole)
+#
+# Same math as the per-query engines above, restructured so the batch is the
+# leading axis of every state array and each inner-loop step performs ONE
+# batched RMQ (``RangeMin.query_batch`` over the concatenated left/right
+# subranges of all lanes) or ONE ``conjunctive_scan`` tile for the whole
+# batch. Outputs are bit-identical to ``vmap``-ing the per-query reference
+# (tests/test_batched_engines.py).
+# ==========================================================================
+def _single_term_batch_state(rmq_minimal: RangeMin, term_lo, term_hi, k: int,
+                             iters: int, *, use_kernel: bool,
+                             interpret: bool | None):
+    """Batched dense-slot heap state: every array is [B, cap]."""
+    B = term_lo.shape[0]
+    cap = 2 * iters + 1
+    hi_incl = term_hi - 1
+    pos0, val0 = rmq_minimal.query_batch(term_lo, hi_incl,
+                                         use_kernel=use_kernel,
+                                         interpret=interpret)
+    kind = jnp.zeros((B, cap), jnp.int32)
+    lo_a = jnp.zeros((B, cap), jnp.int32).at[:, 0].set(term_lo)
+    hi_a = jnp.full((B, cap), -1, jnp.int32).at[:, 0].set(hi_incl)
+    pos_a = jnp.zeros((B, cap), jnp.int32).at[:, 0].set(pos0)
+    val_a = jnp.full((B, cap), INF_DOCID, jnp.int32).at[:, 0].set(
+        jnp.where(term_lo <= hi_incl, val0, INF_DOCID))
+    out = jnp.full((B, k), INF_DOCID, jnp.int32)
+    n_out = jnp.zeros((B,), jnp.int32)
+    prev = jnp.full((B,), -1, jnp.int32)
+    return (kind, lo_a, hi_a, pos_a, val_a, out, n_out, prev)
+
+
+def _single_term_batch_body(index: InvertedIndex, rmq_minimal: RangeMin,
+                            k: int, *, use_kernel: bool,
+                            interpret: bool | None):
+    """One batched pop: mirrors ``_single_term_body`` lane-for-lane but with
+    one 2B-lane RMQ and one fused gather per source array per trip."""
+    n_post = index.postings.shape[0]
+
+    def body(i, state):
+        kind, lo_a, hi_a, pos_a, val_a, out, n_out, prev = state
+        B = prev.shape[0]
+        rows = jnp.arange(B)
+        nf = 1 + 2 * i                         # next free slot (data-independent)
+        best = jnp.argmin(val_a, axis=1)
+        bval = val_a[rows, best]
+        found = bval < INF_DOCID
+        is_range = kind[rows, best] == 0
+        # ---- emit (dedup against previous emission) ----
+        emit = found & (bval != prev)
+        out = out.at[rows, jnp.where(emit, n_out, k)].set(bval, mode="drop")
+        n_out = n_out + emit.astype(jnp.int32)
+        prev = jnp.where(found, bval, prev)
+        # ---- one batched RMQ for both split subranges of every lane ----
+        tstar = pos_a[rows, best]              # range: argmin term; iter: ptr
+        lo = lo_a[rows, best]
+        hi = hi_a[rows, best]
+        pos2, val2 = rmq_minimal.query_batch(
+            jnp.concatenate([lo, tstar + 1]),
+            jnp.concatenate([tstar - 1, hi]),
+            use_kernel=use_kernel, interpret=interpret)
+        lpos, rpos = pos2[:B], pos2[B:]
+        lval = jnp.where((lo <= tstar - 1) & found & is_range,
+                         val2[:B], INF_DOCID)
+        rval = jnp.where((tstar + 1 <= hi) & found & is_range,
+                         val2[B:], INF_DOCID)
+        # ---- one offsets gather: new iterator bounds + advance bound ----
+        ct = jnp.clip(tstar, 0, index.n_terms)
+        cl = jnp.clip(lo, 0, index.n_terms)    # iterator slots keep term in lo
+        offs = index.offsets[jnp.concatenate([ct, ct + 1, cl + 1])]
+        it_start, it_end, adv_end = offs[:B], offs[B:2 * B], offs[2 * B:]
+        it_ptr = it_start + 1                  # minimal was postings[start]
+        adv_ptr = tstar + 1                    # iterator pop: ptr + 1
+        # ---- one postings gather: instantiated + advanced iterator values ----
+        pv = index.postings[jnp.concatenate([
+            jnp.minimum(it_ptr, n_post - 1), jnp.minimum(adv_ptr, n_post - 1)])]
+        it_val = jnp.where((it_ptr < it_end) & found & is_range,
+                           pv[:B], INF_DOCID)
+        adv_val = jnp.where((adv_ptr < adv_end) & found & (~is_range),
+                            pv[B:], INF_DOCID)
+        # ---- write popped slot ----
+        kind = kind.at[rows, best].set(jnp.where(is_range, 0, 1))
+        lo_a = lo_a.at[rows, best].set(lo)
+        hi_a = hi_a.at[rows, best].set(jnp.where(is_range, tstar - 1, hi))
+        pos_a = pos_a.at[rows, best].set(jnp.where(is_range, lpos, adv_ptr))
+        val_a = val_a.at[rows, best].set(jnp.where(is_range, lval, adv_val))
+        # ---- two fresh slots (static columns; inactive unless a live range) ----
+        live = found & is_range
+        kind = kind.at[:, nf].set(0)
+        lo_a = lo_a.at[:, nf].set(tstar + 1)
+        hi_a = hi_a.at[:, nf].set(hi)
+        pos_a = pos_a.at[:, nf].set(rpos)
+        val_a = val_a.at[:, nf].set(jnp.where(live, rval, INF_DOCID))
+        kind = kind.at[:, nf + 1].set(1)
+        lo_a = lo_a.at[:, nf + 1].set(tstar)   # iterator: term id here
+        hi_a = hi_a.at[:, nf + 1].set(-1)
+        pos_a = pos_a.at[:, nf + 1].set(it_ptr)
+        val_a = val_a.at[:, nf + 1].set(jnp.where(live, it_val, INF_DOCID))
+        return kind, lo_a, hi_a, pos_a, val_a, out, n_out, prev
+
+    return body
+
+
+def single_term_topk_bounded_batch(index: InvertedIndex,
+                                   rmq_minimal: RangeMin, term_lo, term_hi,
+                                   k: int, trips: int, *,
+                                   use_kernel: bool = False,
+                                   interpret: bool | None = None):
+    """Batch-native ``single_term_topk_bounded``: term_lo/hi int32[B].
+
+    Returns (out int32[B, k], done bool[B]), bit-identical to vmap of the
+    per-query engine. ``use_kernel`` routes every pop's RMQ through the
+    Pallas kernel (TPU); the default XLA path is the in-block-window
+    gather formulation of ``RangeMin.query_batch``.
+    """
+    trips = min(trips, 2 * k)
+    state = _single_term_batch_state(rmq_minimal, term_lo, term_hi, k, trips,
+                                     use_kernel=use_kernel,
+                                     interpret=interpret)
+    state = lax.fori_loop(
+        0, trips,
+        _single_term_batch_body(index, rmq_minimal, k, use_kernel=use_kernel,
+                                interpret=interpret),
+        state)
+    val_a, out, n_out = state[4], state[5], state[6]
+    bad = term_lo >= term_hi
+    done = (bad | (n_out >= k) | (jnp.min(val_a, axis=1) >= INF_DOCID)
+            | (trips >= 2 * k))
+    return jnp.where(bad[:, None], INF_DOCID, out), done
+
+
+def single_term_topk_batch(index: InvertedIndex, rmq_minimal: RangeMin,
+                           term_lo, term_hi, k: int, *,
+                           use_kernel: bool = False,
+                           interpret: bool | None = None):
+    """Batch-native ``single_term_topk`` (full 2k-trip budget, always exact)."""
+    out, _ = single_term_topk_bounded_batch(index, rmq_minimal, term_lo,
+                                            term_hi, k, 2 * k,
+                                            use_kernel=use_kernel,
+                                            interpret=interpret)
+    return out
+
+
+def _extract_rows(completions, docids):
+    """Batched forward-index rows [..., M] via the object's own ``extract``
+    (Completions or LocalFwd) — the docid->row contract stays in one place."""
+    fn = lambda d: completions.extract(d)[0]
+    for _ in range(docids.ndim):
+        fn = jax.vmap(fn)
+    return fn(docids)
+
+
+def conjunctive_multi_batch(index: InvertedIndex, completions, prefix_ids,
+                            prefix_len, term_lo, term_hi, k: int,
+                            *, tile: int = 128, max_tiles: int = 4096,
+                            use_kernel: bool = False,
+                            interpret: bool | None = None,
+                            list_pad: int = 8192):
+    """Batch-native ``conjunctive_multi``: prefix_ids int32[B, PMAX], the
+    rest int32[B]. Bit-identical to vmap of the per-query engine.
+
+    Each step processes one ``tile``-wide candidate chunk for ALL lanes:
+    the membership probes + forward-range check either run as batched
+    ranged binary searches (XLA path) or as ONE fused
+    ``kernels.intersect.ops.conjunctive_scan`` call (``use_kernel=True``).
+    The kernel path holds the probe lists in VMEM, so it requires every
+    needed probe list to fit in ``list_pad`` (a power of two); callers with
+    host visibility (serve/frontend.py) check the bound before dispatching.
+    Per-lane progress is masked exactly like vmap's batched ``while_loop``:
+    a finished lane stops advancing while others continue.
+    """
+    B, PMAX = prefix_ids.shape
+    rows = jnp.arange(B)
+    valid_t = jnp.arange(PMAX)[None, :] < prefix_len[:, None]      # [B, PMAX]
+    starts, ends = index.list_bounds(prefix_ids)                   # [B, PMAX]
+    lens = jnp.where(valid_t, ends - starts, INT32_MAX)
+    driver = jnp.argmin(lens, axis=1)                              # [B]
+    d_start = starts[rows, driver]
+    d_end = ends[rows, driver]
+    d_len = d_end - d_start
+
+    n_post = index.postings.shape[0]
+    lane = jnp.arange(tile, dtype=jnp.int32)
+    need = valid_t & (jnp.arange(PMAX)[None, :] != driver[:, None])  # [B, PMAX]
+
+    if use_kernel:
+        from ..kernels.intersect.ops import conjunctive_scan
+
+        assert list_pad & (list_pad - 1) == 0, "list_pad must be a power of two"
+        # probe lists gathered once to [B, PMAX, L] (VMEM-resident in the
+        # kernel); unused slots get length 0. An empty-but-needed list (a
+        # stripe holding none of a term's postings) kills its lane outright.
+        lpos = jnp.arange(list_pad)
+        g_idx = jnp.minimum(starts[:, :, None] + lpos[None, None, :],
+                            n_post - 1)
+        in_l = (starts[:, :, None] + lpos[None, None, :]) < ends[:, :, None]
+        lists = jnp.where(in_l & need[:, :, None], index.postings[g_idx],
+                          INF_DOCID)
+        k_lens = jnp.where(need, jnp.minimum(ends - starts, list_pad), 0)
+        lane_dead = jnp.any(need & (ends == starts), axis=1)       # [B]
+
+    def active_of(state):
+        t, found, _ = state
+        return (t * tile < d_len) & (found < k) & (t < max_tiles)
+
+    def cond(state):
+        return jnp.any(active_of(state))
+
+    def body(state):
+        t, found, res = state
+        active = active_of(state)
+        base = d_start + t * tile
+        idx = jnp.minimum(base[:, None] + lane[None, :], n_post - 1)
+        cand = index.postings[idx]                                  # [B, T]
+        in_list = (base[:, None] + lane[None, :]) < d_end[:, None]
+        if use_kernel:
+            mask = conjunctive_scan(
+                jnp.where(in_list, cand, INF_DOCID), lists, k_lens,
+                _extract_rows(completions, cand), term_lo, term_hi,
+                use_kernel=True, interpret=interpret)
+            hits = mask & in_list & ~lane_dead[:, None]
+        else:
+            # ONE fused [B, PMAX, T] ranged search probes every candidate
+            # into every prefix list simultaneously (vs PMAX sequential
+            # per-list searches under the scalar/vmap form)
+            sh = (B, PMAX, tile)
+            pos = ranged_searchsorted(
+                index.postings, jnp.broadcast_to(cand[:, None, :], sh),
+                jnp.broadcast_to(starts[:, :, None], sh),
+                jnp.broadcast_to(ends[:, :, None], sh), side="left")
+            hit = (pos < ends[:, :, None]) & (
+                index.postings[jnp.minimum(pos, n_post - 1)]
+                == cand[:, None, :])
+            member = jnp.all(hit | ~need[:, :, None], axis=1)
+            fwd_rows = _extract_rows(completions, cand)             # [B, T, M]
+            fwd_ok = jnp.any((fwd_rows >= term_lo[:, None, None])
+                             & (fwd_rows < term_hi[:, None, None]), axis=2)
+            hits = in_list & member & fwd_ok
+        hits &= active[:, None]                # frozen lanes make no progress
+        # first-k compaction in docid order (per lane)
+        pos_out = found[:, None] + jnp.cumsum(hits.astype(jnp.int32), 1) - 1
+        write = hits & (pos_out < k)
+        res = res.at[rows[:, None], jnp.where(write, pos_out, k)].set(
+            jnp.where(write, cand,
+                      res[rows[:, None], jnp.minimum(pos_out, k)]),
+            mode="drop")
+        found = jnp.minimum(found + hits.sum(axis=1, dtype=jnp.int32), k)
+        return jnp.where(active, t + 1, t), found, res
+
+    res0 = jnp.full((B, k + 1), INF_DOCID, jnp.int32)
+    t0 = jnp.zeros((B,), jnp.int32)
+    _, _, res = lax.while_loop(cond, body, (t0, t0, res0))
+    bad = ((term_lo >= term_hi) | (prefix_len <= 0)
+           | jnp.any(jnp.where(valid_t, prefix_ids == 0, False), axis=1))
+    return jnp.where(bad[:, None], INF_DOCID, res[:, :k])
+
+
+def complete_conjunctive_batch(index, completions, rmq_minimal,
+                               prefix_ids, prefix_len, term_lo, term_hi,
+                               k: int, *, use_kernel: bool = False,
+                               interpret: bool | None = None, **kw):
+    """Batch-native fused Complete(): both engines + branchless select.
+
+    The fallback for call sites that cannot partition by query class (the
+    shard_map striped path, mixed jit-only batches); class-pure traffic
+    should go through ``serve.frontend.QACFrontend``.
+
+    ``use_kernel`` routes only the single-term RMQ through Pallas. The
+    intersect kernel is deliberately NOT enabled here: it is only correct
+    when every probe list fits its static ``list_pad``, a bound that needs
+    host visibility — jit-only call sites cannot verify it, so they keep
+    the XLA probe path (see the ROADMAP kernel-routing policy).
+    """
+    multi = conjunctive_multi_batch(index, completions, prefix_ids,
+                                    prefix_len, term_lo, term_hi, k,
+                                    use_kernel=False,
+                                    interpret=interpret, **kw)
+    single = single_term_topk_batch(index, rmq_minimal, term_lo, term_hi, k,
+                                    use_kernel=use_kernel,
+                                    interpret=interpret)
+    return jnp.where((prefix_len > 0)[:, None], multi, single)

@@ -28,6 +28,7 @@ class StripedQACIndex:
     fwd_nterms: jnp.ndarray    # int32[S, N_loc]
     rmq_values: jnp.ndarray    # int32[S, n_pad] (padded minimal)
     rmq_st: jnp.ndarray        # int32[S, levels, nb]
+    rmq_ib: jnp.ndarray        # int8[S, IB_LEVELS, n_pad] in-block argmins
     n_stripes: int
     n_terms: int
     n_local_docs: int
@@ -60,7 +61,7 @@ def build_striped(term_rows: np.ndarray, docid_of_row: np.ndarray,
     docid_of_row = np.asarray(docid_of_row, np.int32)
     n, m = term_rows.shape
     n_loc = (n + n_stripes - 1) // n_stripes
-    posts, offs, mins, fwds, fnts, rvals, rsts = [], [], [], [], [], [], []
+    posts, offs, mins, fwds, fnts, rvals, rsts, ribs = [], [], [], [], [], [], [], []
     for s in range(n_stripes):
         keep = (docid_of_row % n_stripes) == s
         sub_idx = InvertedIndex.build(term_rows[keep], docid_of_row[keep], n_terms)
@@ -77,6 +78,7 @@ def build_striped(term_rows: np.ndarray, docid_of_row: np.ndarray,
         fnts.append(fnt)
         rm = RangeMin.build(np.asarray(sub_idx.minimal))
         rvals.append(np.asarray(rm.values))
+        ribs.append(np.asarray(rm.ib))
         rsts.append((np.asarray(rm.st_pos), rm.levels, rm.n_blocks))
     p_pad = max(len(p) for p in posts)
     posts = [np.pad(p, (0, p_pad - len(p)), constant_values=INF_DOCID) for p in posts]
@@ -94,6 +96,7 @@ def build_striped(term_rows: np.ndarray, docid_of_row: np.ndarray,
         fwd_nterms=jnp.asarray(np.stack(fnts)),
         rmq_values=jnp.asarray(np.stack(rvals)),
         rmq_st=jnp.asarray(np.stack(sts)),
+        rmq_ib=jnp.asarray(np.stack(ribs)),
         n_stripes=n_stripes,
         n_terms=n_terms,
         n_local_docs=n_loc,
@@ -117,6 +120,7 @@ def local_index(striped: StripedQACIndex):
     rmq = RangeMin(
         values=striped.rmq_values[0],
         st_pos=striped.rmq_st[0],
+        ib=striped.rmq_ib[0],
         n=striped.minimal.shape[-1],
         n_blocks=striped.rmq_blocks,
         levels=striped.rmq_levels,

@@ -37,15 +37,18 @@ def _kernel(cands_ref, lists_ref, lens_ref, fwd_ref, bounds_ref, out_ref,
     for p in range(P):                           # static: few prefix terms
         row = lists_ref[0, p, :]                 # [L] ascending, INF-padded
         n = lens_ref[0, p]
-        # branchless binary search of all T lanes into row
+        # branchless binary search of all T lanes into row; the insertion
+        # point lives in [0, L] (L+1 states), so log2(L)+1 halvings are
+        # needed to pin it down — log2(L) alone leaves (lo, lo+1) unresolved
         lo = jnp.zeros((T,), jnp.int32)
         hi = jnp.full((T,), L, jnp.int32)
-        for _ in range(log2_L):
+        for _ in range(log2_L + 1):
             mid = (lo + hi) // 2
-            v = row[mid]                         # VMEM gather
+            v = row[jnp.minimum(mid, L - 1)]     # VMEM gather
             go = v < cands
-            lo = jnp.where(go, mid + 1, lo)
-            hi = jnp.where(go, hi, mid)
+            valid = lo < hi
+            lo = jnp.where(valid & go, mid + 1, lo)
+            hi = jnp.where(valid & ~go, mid, hi)
         hit = (lo < n) & (row[jnp.minimum(lo, L - 1)] == cands)
         member &= jnp.where(n > 0, hit, True)
     tlo = bounds_ref[0, 0]

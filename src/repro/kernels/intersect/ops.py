@@ -6,18 +6,23 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...compat import pallas_interpret_default
 from .kernel import conjunctive_scan_kernel
 from .ref import conjunctive_scan_ref
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
 def conjunctive_scan(cands, lists, lens, fwd_rows, term_lo, term_hi,
-                     *, use_kernel: bool = True, interpret: bool = True):
+                     *, use_kernel: bool = True, interpret: bool | None = None):
     """bool[B, T] conjunctive hits; see ref.py for semantics.
 
     ``use_kernel=False`` falls back to the XLA reference (used by the
     dry-run, where Pallas cannot lower on the host platform).
+    ``interpret=None`` resolves platform-aware: real lowering on TPU,
+    interpret mode elsewhere.
     """
+    if interpret is None:
+        interpret = pallas_interpret_default()
     if not use_kernel:
         return conjunctive_scan_ref(cands, lists, lens, fwd_rows, term_lo, term_hi)
     bounds = jnp.stack([term_lo, term_hi], axis=1).astype(jnp.int32)

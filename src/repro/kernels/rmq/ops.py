@@ -6,18 +6,23 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...compat import pallas_interpret_default
 from .kernel import rmq_query_kernel, BLOCK
 from .ref import rmq_query_ref
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
 def rmq_query(values, st_pos, p, q, *, use_kernel: bool = True,
-              interpret: bool = True):
+              interpret: bool | None = None):
     """Batched (pos, val) of argmin over values[p[i]..q[i]].
 
     values: int32[n_pad] (INF padded to a BLOCK multiple); st_pos: sparse
     table positions [levels, nb]. p, q: int32[B] inclusive ranges.
+    ``interpret=None`` resolves platform-aware: real lowering on TPU,
+    interpret mode elsewhere.
     """
+    if interpret is None:
+        interpret = pallas_interpret_default()
     n_pad = values.shape[0]
     nb = n_pad // BLOCK
     st_val = values[st_pos]                         # [levels, nb]

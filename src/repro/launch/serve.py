@@ -2,7 +2,7 @@
 batched completions — the paper's system end-to-end.
 
   PYTHONPATH=src python -m repro.launch.serve --queries 20000 --batch 256 \
-      [--stripes 4] [--interactive "bmw i3 s"]
+      [--stripes 4] [--routed] [--interactive "bmw i3 s"]
 """
 from __future__ import annotations
 
@@ -18,6 +18,7 @@ from repro.core import build_qac_index, parse_queries, corpus_stats, INF_DOCID
 from repro.core.builder import build_corpus
 from repro.core.striped import build_striped
 from repro.serve.qac import qac_serve_step, qac_serve_striped
+from repro.serve.frontend import QACFrontend
 from repro.core.strings import decode_string
 
 
@@ -26,6 +27,10 @@ def main():
     ap.add_argument("--queries", type=int, default=20_000)
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--stripes", type=int, default=0)
+    ap.add_argument("--routed", action="store_true",
+                    help="serve through the class-routed QACFrontend "
+                         "(host partition by query class) instead of the "
+                         "fused both-engines step")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--interactive", default=None,
                     help="serve one literal partial query and print strings")
@@ -64,7 +69,12 @@ def main():
         partials.append(" ".join(toks[:-1] + [toks[-1][:cut]]))
     pids, plen, pok, suf, slen = parse_queries(qidx.dictionary, partials)
 
-    if args.stripes > 1:
+    if args.routed:
+        # ROADMAP PR-1 next step: the class-routed frontend as the launcher
+        # entry point — host partition by class, per-class jit cache
+        frontend = QACFrontend(qidx, k=args.k)
+        fn = lambda a, b, c, d: jnp.asarray(frontend.complete(a, b, c, d))
+    elif args.stripes > 1:
         dictionary, rows, sc2, _ = build_corpus(qs, sc)
         order = np.lexsort(tuple(rows[:, j] for j in range(rows.shape[1] - 1, -1, -1)) + (-sc2,))
         d_of_row = np.empty(len(rows), dtype=np.int32)
@@ -82,9 +92,12 @@ def main():
         out = fn(pids, plen, suf, slen).block_until_ready()
     dt = (time.time() - t0) / n_rounds
     n_res = int((np.asarray(out) != INF_DOCID).sum())
-    print(f"[serve] batch={args.batch} k={args.k} stripes={max(args.stripes,1)}: "
+    mode = "routed" if args.routed else f"stripes={max(args.stripes, 1)}"
+    print(f"[serve] batch={args.batch} k={args.k} {mode}: "
           f"{dt/args.batch*1e6:.1f} us/query, {args.batch/dt:.0f} QPS "
           f"(host CPU), {n_res} results")
+    if args.routed:
+        print(f"[serve] frontend stats: {frontend.stats}")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,12 @@
 from .qac import (  # noqa: F401
     qac_serve_step,
+    qac_serve_step_vmap,
     qac_serve_striped,
     serve_single_term,
+    serve_single_term_vmap,
     serve_single_term_full,
     serve_multi_term,
+    serve_multi_term_vmap,
 )
 from .frontend import QACFrontend, route_classes  # noqa: F401
 from .lm import prefill_step, make_decode_step  # noqa: F401

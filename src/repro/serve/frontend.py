@@ -29,9 +29,20 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..core.types import INF_DOCID
+from ..compat import default_use_kernel
+from ..core.types import INF_DOCID, MAX_TERMS
 from ..core.builder import QACIndex
 from .qac import serve_single_term, serve_single_term_full, serve_multi_term
+
+# VMEM ceiling for the intersect kernel's probe-list pad: beyond this the
+# [P, L] block would not fit comfortably next to the candidate tile, so the
+# frontend falls back to the XLA probe path for the multi-term class.
+MAX_LIST_PAD = 1 << 15
+# HBM budget for the [B, PMAX, list_pad] probe-list gather the kernel path
+# materializes per multi-term dispatch; buckets whose footprint exceeds it
+# fall back to the XLA probe path (per-bucket list_pad specialization is the
+# ROADMAP next step)
+MAX_MULTI_KERNEL_BYTES = 256 << 20
 
 
 def route_classes(prefix_len):
@@ -51,13 +62,25 @@ class QACFrontend:
 
     def __init__(self, qidx: QACIndex, *, k: int = 10, tile: int = 128,
                  max_tiles: int = 4096, min_bucket: int = 8,
-                 trips: int | None = None):
+                 trips: int | None = None, use_kernel: bool | None = None,
+                 interpret: bool | None = None):
         self.qidx = qidx
         self.k = k
         self.tile = tile
         self.max_tiles = max_tiles
         self.min_bucket = min_bucket
         self.trips = trips
+        self.use_kernel = (default_use_kernel() if use_kernel is None
+                           else use_kernel)
+        self.interpret = interpret
+        # host-verified probe-list bound for the intersect kernel: the
+        # longest posting list in the index, padded to a power of two. Only
+        # the frontend can make this check (it routes on the host), which is
+        # why the jit-only fused/striped paths keep the XLA probe path.
+        offs = np.asarray(qidx.index.offsets)
+        max_list = int(np.max(np.diff(offs))) if offs.size > 1 else 1
+        self.list_pad = 1 << max(1, (max_list - 1).bit_length())
+        self.multi_kernel = self.use_kernel and self.list_pad <= MAX_LIST_PAD
         self._cache = {}
         self.stats = {"requests": 0, "single_queries": 0, "multi_queries": 0,
                       "single_fallbacks": 0}
@@ -72,18 +95,23 @@ class QACFrontend:
         if fn is None:
             if engine == "single":
                 def _single(suf, slen):
-                    out, done = serve_single_term(self.qidx, suf, slen, k=k,
-                                                  trips=self.trips)
+                    out, done = serve_single_term(
+                        self.qidx, suf, slen, k=k, trips=self.trips,
+                        use_kernel=self.use_kernel, interpret=self.interpret)
                     return out, jnp.all(done)   # scalar: one tiny host sync
 
                 fn = jax.jit(_single)
             elif engine == "single_full":
                 fn = jax.jit(lambda suf, slen: serve_single_term_full(
-                    self.qidx, suf, slen, k=k))
+                    self.qidx, suf, slen, k=k, use_kernel=self.use_kernel,
+                    interpret=self.interpret))
             elif engine == "multi":
+                use_k = (self.multi_kernel and bucket * MAX_TERMS
+                         * self.list_pad * 4 <= MAX_MULTI_KERNEL_BYTES)
                 fn = jax.jit(lambda pids, plen, suf, slen: serve_multi_term(
                     self.qidx, pids, plen, suf, slen, k=k, tile=self.tile,
-                    max_tiles=self.max_tiles))
+                    max_tiles=self.max_tiles, use_kernel=use_k,
+                    interpret=self.interpret, list_pad=self.list_pad))
             else:
                 raise ValueError(engine)
             self._cache[key] = fn

@@ -5,21 +5,30 @@ Distributed plan (DESIGN.md §4): requests are data-parallel over
 every one of its queries locally (conjunctive or single-term), then the
 k-candidate lists are all-gathered over ``model`` and min-k merged — O(k·S)
 bytes per query, the production scatter/gather plan.
+
+Engine policy (ISSUE 2): every serve entry point runs the batch-native
+engines from ``core.search`` — one batched RMQ / conjunctive tile per inner
+step across all B lanes — with a platform-aware kernel toggle
+(``use_kernel=None`` -> Pallas on TPU, XLA reference elsewhere; see
+``repro.compat.default_use_kernel``). The intersect kernel additionally
+needs a host-verified probe-list bound, so only ``serve.frontend`` (which
+routes on the host) enables it. The old vmap-of-scalar forms are kept as
+``*_vmap`` parity references and benchmark baselines.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from ..compat import shard_map
+from ..compat import shard_map, default_use_kernel
 
-from ..core.types import INF_DOCID
-from ..core.search import (complete_conjunctive, conjunctive_multi,
-                           single_term_topk, single_term_topk_bounded)
+from ..core.search import (complete_conjunctive, complete_conjunctive_batch,
+                           conjunctive_multi, conjunctive_multi_batch,
+                           single_term_topk_batch,
+                           single_term_topk_bounded,
+                           single_term_topk_bounded_batch)
 from ..core.striped import StripedQACIndex, local_index
 from ..core.builder import QACIndex
 from ..distributed.sharding import get_mesh
@@ -27,7 +36,8 @@ from ..distributed.sharding import get_mesh
 
 def qac_serve_step(qidx: QACIndex, prefix_ids, prefix_len, suffix_chars,
                    suffix_len, *, k: int = 10, tile: int = 128,
-                   max_tiles: int = 4096):
+                   max_tiles: int = 4096, use_kernel: bool | None = None,
+                   interpret: bool | None = None):
     """Fused single-index batched serve: -> docids int32[B, k] (INF padded).
 
     Every lane pays for BOTH engines (branchless select). This is the
@@ -35,6 +45,19 @@ def qac_serve_step(qidx: QACIndex, prefix_ids, prefix_len, suffix_chars,
     ``serve.frontend.QACFrontend``, which dispatches each class to only its
     engine via ``serve_single_term`` / ``serve_multi_term`` below.
     """
+    use_kernel = default_use_kernel() if use_kernel is None else use_kernel
+    term_lo, term_hi = qidx.dictionary.locate_prefix(suffix_chars, suffix_len)
+    return complete_conjunctive_batch(
+        qidx.index, qidx.completions, qidx.rmq_minimal,
+        prefix_ids, prefix_len, term_lo, term_hi, k,
+        tile=tile, max_tiles=max_tiles, use_kernel=use_kernel,
+        interpret=interpret)
+
+
+def qac_serve_step_vmap(qidx: QACIndex, prefix_ids, prefix_len, suffix_chars,
+                        suffix_len, *, k: int = 10, tile: int = 128,
+                        max_tiles: int = 4096):
+    """vmap-of-scalar fused serve — the parity/benchmark reference."""
     term_lo, term_hi = qidx.dictionary.locate_prefix(suffix_chars, suffix_len)
 
     def one(pids, plen, tl, th):
@@ -47,7 +70,9 @@ def qac_serve_step(qidx: QACIndex, prefix_ids, prefix_len, suffix_chars,
 
 # -- split engines (class-pure batches; used by serve/frontend.py) ------------
 def serve_single_term(qidx: QACIndex, suffix_chars, suffix_len, *, k: int = 10,
-                      trips: int | None = None):
+                      trips: int | None = None,
+                      use_kernel: bool | None = None,
+                      interpret: bool | None = None):
     """Batched single-term serve (paper §3.3) -> (docids int32[B, k], done).
 
     For a batch known to be 100% single-term (empty prefix). ``trips`` bounds
@@ -55,6 +80,18 @@ def serve_single_term(qidx: QACIndex, suffix_chars, suffix_len, *, k: int = 10,
     duplicate runs); ``done[b]`` is False where the budget was too small and
     the caller must fall back to the full 2k-trip engine for exact results.
     """
+    trips = (k + 2) if trips is None else trips
+    use_kernel = default_use_kernel() if use_kernel is None else use_kernel
+    term_lo, term_hi = qidx.dictionary.locate_prefix(suffix_chars, suffix_len)
+    return single_term_topk_bounded_batch(qidx.index, qidx.rmq_minimal,
+                                          term_lo, term_hi, k, trips,
+                                          use_kernel=use_kernel,
+                                          interpret=interpret)
+
+
+def serve_single_term_vmap(qidx: QACIndex, suffix_chars, suffix_len, *,
+                           k: int = 10, trips: int | None = None):
+    """vmap-of-scalar single-term serve — the parity/benchmark reference."""
     trips = (k + 2) if trips is None else trips
     term_lo, term_hi = qidx.dictionary.locate_prefix(suffix_chars, suffix_len)
 
@@ -66,20 +103,38 @@ def serve_single_term(qidx: QACIndex, suffix_chars, suffix_len, *, k: int = 10,
 
 
 def serve_single_term_full(qidx: QACIndex, suffix_chars, suffix_len, *,
-                           k: int = 10):
+                           k: int = 10, use_kernel: bool | None = None,
+                           interpret: bool | None = None):
     """Batched single-term serve, full 2k-trip budget (always exact)."""
+    use_kernel = default_use_kernel() if use_kernel is None else use_kernel
     term_lo, term_hi = qidx.dictionary.locate_prefix(suffix_chars, suffix_len)
-
-    def one(tl, th):
-        return single_term_topk(qidx.index, qidx.rmq_minimal, tl, th, k)
-
-    return jax.vmap(one)(term_lo, term_hi)
+    return single_term_topk_batch(qidx.index, qidx.rmq_minimal, term_lo,
+                                  term_hi, k, use_kernel=use_kernel,
+                                  interpret=interpret)
 
 
 def serve_multi_term(qidx: QACIndex, prefix_ids, prefix_len, suffix_chars,
                      suffix_len, *, k: int = 10, tile: int = 128,
-                     max_tiles: int = 4096):
-    """Batched conjunctive serve (Fig 5 Fwd) for a 100%-multi-term batch."""
+                     max_tiles: int = 4096, use_kernel: bool = False,
+                     interpret: bool | None = None, list_pad: int = 8192):
+    """Batched conjunctive serve (Fig 5 Fwd) for a 100%-multi-term batch.
+
+    ``use_kernel`` here defaults to False (not platform-resolved): the
+    intersect kernel holds probe lists in VMEM and is only correct when
+    every needed list fits in ``list_pad``, a bound the caller must verify
+    on the host (``serve.frontend.QACFrontend`` does).
+    """
+    term_lo, term_hi = qidx.dictionary.locate_prefix(suffix_chars, suffix_len)
+    return conjunctive_multi_batch(qidx.index, qidx.completions, prefix_ids,
+                                   prefix_len, term_lo, term_hi, k, tile=tile,
+                                   max_tiles=max_tiles, use_kernel=use_kernel,
+                                   interpret=interpret, list_pad=list_pad)
+
+
+def serve_multi_term_vmap(qidx: QACIndex, prefix_ids, prefix_len,
+                          suffix_chars, suffix_len, *, k: int = 10,
+                          tile: int = 128, max_tiles: int = 4096):
+    """vmap-of-scalar conjunctive serve — the parity/benchmark reference."""
     term_lo, term_hi = qidx.dictionary.locate_prefix(suffix_chars, suffix_len)
 
     def one(pids, plen, tl, th):
@@ -90,23 +145,27 @@ def serve_multi_term(qidx: QACIndex, prefix_ids, prefix_len, suffix_chars,
 
 
 def _local_serve(striped: StripedQACIndex, prefix_ids, prefix_len,
-                 term_lo, term_hi, k: int, tile: int, max_tiles: int):
-    """Runs on one stripe (inside shard_map): [B_loc, k] local top-k."""
+                 term_lo, term_hi, k: int, tile: int, max_tiles: int,
+                 use_kernel: bool = False, interpret: bool | None = None):
+    """Runs on one stripe (inside shard_map): [B_loc, k] local top-k.
+
+    Batch-native fused engines; ``use_kernel`` routes the per-pop RMQ
+    through the Pallas kernel (the intersect kernel stays off here — no
+    host-side probe-list bound is available inside shard_map).
+    """
     idx, fwd, rmq_min = local_index(striped)
-
-    def one(pids, plen, tl, th):
-        multi = conjunctive_multi(idx, fwd, pids, plen, tl, th, k,
-                                  tile=tile, max_tiles=max_tiles)
-        single = single_term_topk(idx, rmq_min, tl, th, k)
-        return jnp.where(plen > 0, multi, single)
-
-    return jax.vmap(one)(prefix_ids, prefix_len, term_lo, term_hi)
+    return complete_conjunctive_batch(idx, fwd, rmq_min, prefix_ids,
+                                      prefix_len, term_lo, term_hi, k,
+                                      tile=tile, max_tiles=max_tiles,
+                                      use_kernel=use_kernel,
+                                      interpret=interpret)
 
 
 def qac_serve_striped(striped: StripedQACIndex, dictionary, prefix_ids,
                       prefix_len, suffix_chars, suffix_len, *, k: int = 10,
                       tile: int = 128, max_tiles: int = 4096, mesh=None,
-                      merge: str = "gather"):
+                      merge: str = "gather", use_kernel: bool | None = None,
+                      interpret: bool | None = None):
     """Distributed serve over the (pod?, data, model) mesh.
 
     Returns global top-k docids int32[B, k]. Without a mesh, runs a loop over
@@ -117,6 +176,7 @@ def qac_serve_striped(striped: StripedQACIndex, dictionary, prefix_ids,
     keeps min-k of (mine, partner's), so the wire carries k·log2(S) ints per
     query instead of k·S (§Perf iteration for the qac cells).
     """
+    use_kernel = default_use_kernel() if use_kernel is None else use_kernel
     term_lo, term_hi = dictionary.locate_prefix(suffix_chars, suffix_len)
     mesh = mesh or get_mesh()
     S = striped.n_stripes
@@ -127,7 +187,8 @@ def qac_serve_striped(striped: StripedQACIndex, dictionary, prefix_ids,
         for s in range(S):
             sub = jax.tree_util.tree_map(lambda a: a[s : s + 1], striped)
             parts.append(_local_serve(sub, prefix_ids, prefix_len,
-                                      term_lo, term_hi, k, tile, max_tiles))
+                                      term_lo, term_hi, k, tile, max_tiles,
+                                      use_kernel, interpret))
         allk = jnp.concatenate(parts, axis=1)              # [B, S*k]
         return lax.top_k(-allk, k)[0] * -1
 
@@ -135,7 +196,8 @@ def qac_serve_striped(striped: StripedQACIndex, dictionary, prefix_ids,
     bspec = P(dp_axes if dp_axes else None)
 
     def local_fn(st, pids, plen, tl, th):
-        local = _local_serve(st, pids, plen, tl, th, k, tile, max_tiles)
+        local = _local_serve(st, pids, plen, tl, th, k, tile, max_tiles,
+                             use_kernel, interpret)
         if merge == "butterfly":
             nsh = mesh.shape["model"]
             cur = local

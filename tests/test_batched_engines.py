@@ -1,0 +1,256 @@
+"""Batch-native engines vs the per-query vmap reference (ISSUE 2).
+
+The batched engines must be bit-identical to ``vmap``-ing the scalar
+reference across every query class — including empty suffix ranges
+(``p > q`` / INF_DOCID padding), duplicate-docid runs that exhaust the
+bounded trip budget, and the Pallas-kernel dispatch under interpret mode.
+``RangeMin.query_batch`` has a two-part contract: ``val`` bit-identical
+always, ``pos`` bit-identical whenever ``val < INF_DOCID``.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from _hyp import given, settings, st
+
+from repro.core import (
+    build_qac_index, parse_queries, INF_DOCID, RangeMin,
+    topk_in_range, topk_in_range_batch,
+    conjunctive_multi, conjunctive_multi_batch,
+    single_term_topk, single_term_topk_batch,
+    single_term_topk_bounded, single_term_topk_bounded_batch,
+)
+from repro.serve.qac import qac_serve_step, qac_serve_step_vmap
+from repro.text import SynthLogConfig, generate_query_log
+
+
+@pytest.fixture(scope="module")
+def built():
+    # small vocab => heavy term co-occurrence => duplicate docids across the
+    # lists of a suffix range (the single-term dedup/trip-budget stressor)
+    qs, sc = generate_query_log(SynthLogConfig(n_queries=500, vocab_size=80,
+                                               mean_term_chars=4.0, seed=9))
+    qidx, kept, _ = build_qac_index(qs, sc)
+    return qidx, kept
+
+
+def _mixed_batch(kept, rng, B, pct_single, pct_garbage=10):
+    multis = [q for q in kept if len(q.split()) >= 2] or kept
+    out = []
+    for _ in range(B):
+        r = rng.integers(0, 100)
+        if r < pct_garbage:
+            out.append("zzzzzzqx" if rng.integers(0, 2) else
+                       kept[rng.integers(0, len(kept))].split()[0] + " zzzzzzqx")
+        elif r < pct_garbage + pct_single:
+            t = kept[rng.integers(0, len(kept))].split()[0]
+            out.append(t[: rng.integers(1, len(t) + 1)])
+        else:
+            toks = multis[rng.integers(0, len(multis))].split()
+            cut = rng.integers(1, len(toks[-1]) + 1)
+            out.append(" ".join(toks[:-1] + [toks[-1][:cut]]))
+    return out
+
+
+def _ranges(qidx, kept, rng, B):
+    """Suffix term ranges for B random partial tokens + garbage/empty cases."""
+    batch = _mixed_batch(kept, rng, B, 100, pct_garbage=25)
+    _, _, _, suf, slen = parse_queries(qidx.dictionary, batch)
+    return qidx.dictionary.locate_prefix(suf, slen)
+
+
+# ---------------------------------------------------------------- query_batch
+def _query_contract(rm, p, q, **kw):
+    pj, qj = jnp.asarray(p), jnp.asarray(q)
+    want_pos, want_val = jax.jit(jax.vmap(rm.query))(pj, qj)
+    got_pos, got_val = jax.jit(
+        lambda a, b: rm.query_batch(a, b, **kw))(pj, qj)
+    np.testing.assert_array_equal(np.asarray(got_val), np.asarray(want_val))
+    live = np.asarray(want_val) < INF_DOCID
+    np.testing.assert_array_equal(np.asarray(got_pos)[live],
+                                  np.asarray(want_pos)[live])
+
+
+@pytest.mark.parametrize("n,dup", [(1000, False), (40_000, False),
+                                   (5_000, True)])
+def test_query_batch_matches_vmap(n, dup):
+    rng = np.random.default_rng(n)
+    vals = (rng.integers(0, 40, n) if dup
+            else rng.permutation(n)).astype(np.int32)
+    rm = RangeMin.build(vals)
+    B = 128
+    p = rng.integers(-5, n, B).astype(np.int32)
+    q = (p + rng.integers(-10, n, B)).astype(np.int32)   # includes p > q
+    _query_contract(rm, p, q)
+
+
+def test_query_batch_kernel_dispatch():
+    rng = np.random.default_rng(1)
+    vals = rng.integers(0, 60, 3000).astype(np.int32)    # duplicate-heavy
+    rm = RangeMin.build(vals)
+    for B in (8, 64, 200):                               # 200: pad-to-128 path
+        p = rng.integers(-3, 3000, B).astype(np.int32)
+        q = (p + rng.integers(-5, 2000, B)).astype(np.int32)
+        _query_contract(rm, p, q, use_kernel=True, interpret=True)
+
+
+@given(st.integers(2, 400), st.integers(0, 2**31 - 2))
+@settings(max_examples=25, deadline=None)
+def test_query_batch_property(n, seed):
+    rng = np.random.default_rng(seed % 2**32)
+    vals = rng.integers(0, max(n // 3, 2), n).astype(np.int32)
+    rm = RangeMin.build(vals)
+    B = 32
+    p = rng.integers(-2, n + 2, B).astype(np.int32)
+    q = rng.integers(-2, n + 2, B).astype(np.int32)
+    _query_contract(rm, p, q)
+
+
+# ---------------------------------------------------------------- topk_in_range
+@pytest.mark.parametrize("dup", [False, True])
+def test_topk_batch_matches_vmap(dup):
+    rng = np.random.default_rng(17 + dup)
+    n = 6_000
+    vals = (rng.integers(0, 99, n) if dup
+            else rng.permutation(n)).astype(np.int32)
+    rm = RangeMin.build(vals)
+    p = np.array([0, 10, 100, 4990, 7, 7, 30, n - 1], np.int32)
+    q = np.array([n, 11, 2000, n, 7, 8, 30, 0], np.int32)  # empty + p > q
+    wv, wp = jax.jit(jax.vmap(lambda a, b: topk_in_range(rm, a, b, 10)))(
+        jnp.asarray(p), jnp.asarray(q))
+    gv, gp = jax.jit(lambda a, b: topk_in_range_batch(rm, a, b, 10))(
+        jnp.asarray(p), jnp.asarray(q))
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(gp), np.asarray(wp))
+
+
+@given(st.integers(0, 2**31 - 2))
+@settings(max_examples=20, deadline=None)
+def test_topk_batch_property(seed):
+    rng = np.random.default_rng(seed % 2**32)
+    n = rng.integers(2, 2000)
+    vals = rng.integers(0, max(int(n) // 2, 2), n).astype(np.int32)
+    rm = RangeMin.build(vals)
+    B = 16
+    p = rng.integers(0, n, B).astype(np.int32)
+    q = rng.integers(0, n + 1, B).astype(np.int32)
+    wv, wp = jax.vmap(lambda a, b: topk_in_range(rm, a, b, 5))(
+        jnp.asarray(p), jnp.asarray(q))
+    gv, gp = topk_in_range_batch(rm, jnp.asarray(p), jnp.asarray(q), 5)
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(gp), np.asarray(wp))
+
+
+# ---------------------------------------------------------------- single-term
+def test_single_term_batch_matches_vmap(built):
+    qidx, kept = built
+    rng = np.random.default_rng(3)
+    tl, th = _ranges(qidx, kept, rng, 64)
+    want = jax.vmap(lambda a, b: single_term_topk(
+        qidx.index, qidx.rmq_minimal, a, b, 10))(tl, th)
+    got = single_term_topk_batch(qidx.index, qidx.rmq_minimal, tl, th, 10)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert (np.asarray(got) == INF_DOCID).any(), "expected INF padding rows"
+
+
+@pytest.mark.parametrize("trips", [1, 3, 12, 20])
+def test_single_term_bounded_batch_matches_vmap(built, trips):
+    """Starvation budgets included: duplicate-docid runs burn pops, so small
+    ``trips`` must reproduce the reference's partial out AND done flags."""
+    qidx, kept = built
+    rng = np.random.default_rng(trips)
+    tl, th = _ranges(qidx, kept, rng, 48)
+    wo, wd = jax.vmap(lambda a, b: single_term_topk_bounded(
+        qidx.index, qidx.rmq_minimal, a, b, 10, trips))(tl, th)
+    go, gd = single_term_topk_bounded_batch(qidx.index, qidx.rmq_minimal,
+                                            tl, th, 10, trips)
+    np.testing.assert_array_equal(np.asarray(go), np.asarray(wo))
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+    if trips == 1:
+        assert not np.asarray(gd).all(), "starvation budget should trip lanes"
+
+
+def test_single_term_batch_kernel_dispatch(built):
+    qidx, kept = built
+    rng = np.random.default_rng(7)
+    tl, th = _ranges(qidx, kept, rng, 32)
+    want = single_term_topk_batch(qidx.index, qidx.rmq_minimal, tl, th, 10)
+    got = single_term_topk_batch(qidx.index, qidx.rmq_minimal, tl, th, 10,
+                                 use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------- conjunctive
+def _multi_inputs(built, seed, B):
+    qidx, kept = built
+    rng = np.random.default_rng(seed)
+    batch = _mixed_batch(kept, rng, B, 0, pct_garbage=15)
+    pids, plen, _, suf, slen = parse_queries(qidx.dictionary, batch)
+    tl, th = qidx.dictionary.locate_prefix(suf, slen)
+    return pids, plen, tl, th
+
+
+def test_conjunctive_batch_matches_vmap(built):
+    qidx, _ = built
+    pids, plen, tl, th = _multi_inputs(built, 11, 40)
+    want = jax.vmap(lambda a, b, c, d: conjunctive_multi(
+        qidx.index, qidx.completions, a, b, c, d, 10))(pids, plen, tl, th)
+    got = conjunctive_multi_batch(qidx.index, qidx.completions, pids, plen,
+                                  tl, th, 10)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_conjunctive_batch_kernel_dispatch(built):
+    qidx, _ = built
+    pids, plen, tl, th = _multi_inputs(built, 13, 16)
+    offs = np.asarray(qidx.index.offsets)
+    list_pad = 1 << max(1, (int(np.max(np.diff(offs))) - 1).bit_length())
+    want = conjunctive_multi_batch(qidx.index, qidx.completions, pids, plen,
+                                   tl, th, 10)
+    got = conjunctive_multi_batch(qidx.index, qidx.completions, pids, plen,
+                                  tl, th, 10, use_kernel=True, interpret=True,
+                                  list_pad=list_pad)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------- striped
+def test_striped_local_serve_matches_vmap(built):
+    """The stripe-local batched engines == vmap of the scalar fused engine
+    over the same stripe-local index (the shard_map body's contract)."""
+    from repro.core.builder import build_corpus
+    from repro.core.striped import build_striped, local_index
+    from repro.core.search import complete_conjunctive
+    from repro.serve.qac import _local_serve
+    from repro.text import SynthLogConfig, generate_query_log
+
+    qidx, kept = built
+    qs, sc = generate_query_log(SynthLogConfig(n_queries=500, vocab_size=80,
+                                               mean_term_chars=4.0, seed=9))
+    dictionary, rows, sc2, _ = build_corpus(qs, sc)
+    order = np.lexsort(tuple(rows[:, j] for j in range(rows.shape[1] - 1, -1, -1)) + (-sc2,))
+    d_of_row = np.empty(len(rows), dtype=np.int32)
+    d_of_row[order] = np.arange(len(rows), dtype=np.int32)
+    striped = build_striped(rows, d_of_row, dictionary.n_terms, 2)
+    rng = np.random.default_rng(29)
+    batch = _mixed_batch(kept, rng, 24, 50)
+    pids, plen, _, suf, slen = parse_queries(qidx.dictionary, batch)
+    tl, th = qidx.dictionary.locate_prefix(suf, slen)
+    for s in range(2):
+        sub = jax.tree_util.tree_map(lambda a: a[s : s + 1], striped)
+        got = _local_serve(sub, pids, plen, tl, th, 10, 128, 4096)
+        idx, fwd, rmq_min = local_index(sub)
+        want = jax.vmap(lambda a, b, c, d: complete_conjunctive(
+            idx, fwd, rmq_min, a, b, c, d, 10))(pids, plen, tl, th)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------- fused serve
+def test_fused_serve_batch_matches_vmap(built):
+    qidx, kept = built
+    rng = np.random.default_rng(23)
+    for B, pct in [(32, 60), (17, 40), (5, 100)]:
+        batch = _mixed_batch(kept, rng, B, pct)
+        pids, plen, _, suf, slen = parse_queries(qidx.dictionary, batch)
+        got = qac_serve_step(qidx, pids, plen, suf, slen, k=10)
+        want = qac_serve_step_vmap(qidx, pids, plen, suf, slen, k=10)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
