@@ -6,7 +6,10 @@ Prints ``name,us_per_call,derived`` CSV lines (one block per module).
 Mapping to the paper: dictionary=Table 3, compression=Table 4,
 conjunctive=Table 5, effectiveness=Table 6, space=Table 7,
 completions=Fig 6a, rmq=Fig 6b; qac_serve and roofline are this system's
-additions (TPU serving plan + §Roofline reader).
+additions (TPU serving plan + §Roofline reader). Every emit lands in
+BENCH_qac.json at the repo root — the perf trajectory future PRs diff
+against; the ``qac_single_engine_kernel_b{64,256,1024}`` keys from
+qac_serve track the heap_topk on-chip kernel route (PR 3).
 """
 from __future__ import annotations
 

@@ -1,18 +1,26 @@
 #!/usr/bin/env bash
 # Seed gate: catches jax import-drift and serving regressions before merge.
-#   1. tier-1 test suite (must collect all modules — zero ImportErrors);
-#   2. quick-mode serving benchmark (exercises the batch-native engines, the
-#      routed frontend, the fused fallback, their parity asserts, and the
-#      striped path end-to-end; writes the BENCH_qac.json snapshot).
+#   1. kernel parity fast-fail: the heap_topk + batched-engine suites first
+#      (bit-identity of every kernel route vs the vmap references) so a
+#      broken kernel fails in ~2 min instead of after the whole tier-1 run;
+#   2. tier-1 test suite (must collect all modules — zero ImportErrors);
+#   3. quick-mode serving benchmark (exercises the batch-native engines, the
+#      heap_topk route B-sweep, the routed frontend, the fused fallback +
+#      its >=parity-vs-vmap acceptance assert, and the striped path
+#      end-to-end; writes the BENCH_qac.json snapshot).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1: pytest =="
-python -m pytest -x -q
+echo "== kernel parity: heap_topk + batched engines =="
+python -m pytest -x -q tests/test_heap_topk.py tests/test_batched_engines.py
 
-echo "== quick-mode serving benchmark =="
+echo "== tier-1: pytest =="
+python -m pytest -x -q --ignore=tests/test_heap_topk.py \
+    --ignore=tests/test_batched_engines.py
+
+echo "== quick-mode serving benchmark (incl. heap_topk bench) =="
 BENCH_QUICK=1 python -m benchmarks.bench_qac_serve
 
 echo "bench json: $(pwd)/BENCH_qac.json"

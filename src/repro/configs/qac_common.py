@@ -36,8 +36,13 @@ class QACArch:
     postings_per_comp: float = 3.1
     k: int = 10
     # kernel-routing toggle for the batched engines: None resolves
-    # platform-aware (Pallas RMQ on TPU, XLA reference elsewhere)
+    # platform-aware (Pallas on TPU, XLA reference elsewhere)
     use_kernel: bool | None = None
+    # heap_topk override for the single-term engine: None lets the engine
+    # decide from the static VMEM fit (this config's eBay-scale RMQ tables
+    # exceed the budget, so its stripes take the per-pop batched-RMQ route;
+    # smaller cells may force the fused kernel with True)
+    heap_kernel: bool | None = None
 
     family = "qac"
 
@@ -96,11 +101,14 @@ class QACArch:
         use_kernel = (default_use_kernel() if self.use_kernel is None
                       else self.use_kernel)
 
+        heap_kernel = self.heap_kernel
+
         def fn(striped, dictionary, pids, plen, schars, slen):
             # §Perf it1 winner: butterfly merge (k·log2(S) vs k·S wire ints)
             return qac_serve_striped(striped, dictionary, pids, plen, schars,
                                      slen, k=k, mesh=mesh, merge="butterfly",
-                                     use_kernel=use_kernel)
+                                     use_kernel=use_kernel,
+                                     heap_kernel=heap_kernel)
 
         # "model flops": integer comparisons dominate; report probe count
         probes = B * (MAX_TERMS * 31 + k * 4)

@@ -173,62 +173,15 @@ class RangeMin:
             return (pos.astype(jnp.int32),
                     jnp.where(invalid, INF_DOCID, val).astype(jnp.int32))
 
-        n_pad = self.values.shape[0]
-        bp, bq = p // BLOCK, qc // BLOCK
-        same = bp == bq
-        # partial-block candidates: c1 over [p, same ? q : blockend(bp)],
-        # c2 over [blockstart(bq), q] — each as two overlapping windows
-        lo1 = p
-        hi1 = jnp.maximum(jnp.where(same, qc, bp * BLOCK + (BLOCK - 1)), p)
-        lo2, hi2 = bq * BLOCK, qc
-        j1 = 31 - lax.clz(jnp.maximum(hi1 - lo1 + 1, 1))
-        j2 = 31 - lax.clz(jnp.maximum(hi2 - lo2 + 1, 1))
-        s1 = hi1 - (1 << j1) + 1
-        s2 = hi2 - (1 << j2) + 1
-        ib_flat = self.ib.reshape(-1)
-        ib_idx = jnp.concatenate([
-            jnp.maximum(j1 - 1, 0) * n_pad + lo1,
-            jnp.maximum(j1 - 1, 0) * n_pad + s1,
-            jnp.maximum(j2 - 1, 0) * n_pad + lo2,
-            jnp.maximum(j2 - 1, 0) * n_pad + s2,
-        ])
-        offs = jnp.where(jnp.concatenate([j1, j1, j2, j2]) == 0, 0,
-                         ib_flat[ib_idx].astype(jnp.int32))
-        pos_w = jnp.concatenate([lo1, s1, lo2, s2]) + offs        # [4B]
-        # middle candidates c3/c4: block-level sparse table
-        cnt = bq - bp - 1
-        has_mid = cnt > 0
-        jm = jnp.where(has_mid, 31 - lax.clz(jnp.maximum(cnt, 1)), 0)
-        jc = jnp.minimum(jm, self.levels - 1)
-        lo_b = jnp.minimum(bp + 1, self.n_blocks - 1)
-        hi_b = jnp.clip(bq - (1 << jc), 0, self.n_blocks - 1)
-        st_flat = self.st_pos.reshape(-1)
-        pos_st = st_flat[jnp.concatenate([jc * self.n_blocks + lo_b,
-                                          jc * self.n_blocks + hi_b])]
-        B = p.shape[0]
-        vals6 = self.values[jnp.concatenate([pos_w, pos_st])]     # one gather
-        v1a, v1b = vals6[:B], vals6[B:2 * B]
-        v2a, v2b = vals6[2 * B:3 * B], vals6[3 * B:4 * B]
-        c3_val, c4_val = vals6[4 * B:5 * B], vals6[5 * B:]
-        p1a, p1b = pos_w[:B], pos_w[B:2 * B]
-        p2a, p2b = pos_w[2 * B:3 * B], pos_w[3 * B:]
-        c3_pos, c4_pos = pos_st[:B], pos_st[B:]
-        # window-pair combine (strict <, prefer the left window) keeps the
-        # leftmost argmin — identical to the scalar masked-lane argmin
-        c1_pos = jnp.where(v1b < v1a, p1b, p1a)
-        c1_val = jnp.minimum(v1a, v1b)
-        c2_pos = jnp.where(v2b < v2a, p2b, p2a)
-        c2_val = jnp.where(same, INF_DOCID, jnp.minimum(v2a, v2b))
-        c3_val = jnp.where(has_mid, c3_val, INF_DOCID)
-        c4_val = jnp.where(has_mid, c4_val, INF_DOCID)
-        # 4-way first-min tournament == argmin([c1..c4]) with low-index ties
-        p12 = jnp.where(c2_val < c1_val, c2_pos, c1_pos)
-        v12 = jnp.minimum(c1_val, c2_val)
-        p34 = jnp.where(c4_val < c3_val, c4_pos, c3_pos)
-        v34 = jnp.minimum(c3_val, c4_val)
-        pos = jnp.where(v34 < v12, p34, p12)
-        val = jnp.where(invalid, INF_DOCID, jnp.minimum(v12, v34))
-        return pos.astype(jnp.int32), val.astype(jnp.int32)
+        # the two-overlapping-window gather formulation lives in ONE place —
+        # kernels/rmq/ref.py — shared with the heap_topk kernel body and the
+        # kernel oracles (lazy import: core never pulls Pallas at import time)
+        from ..kernels.rmq.ref import rmq_window_batch
+
+        return rmq_window_batch(
+            self.values, self.ib.reshape(-1), self.st_pos.reshape(-1), p, qc,
+            n=n, levels=self.levels, n_blocks=self.n_blocks,
+            nb_stride=self.n_blocks, n_pad=self.values.shape[0])
 
     def space_bytes(self) -> int:
         # values are shared with the owner

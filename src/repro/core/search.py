@@ -14,8 +14,10 @@ Three device-side engines:
 The per-query functions (``jax.vmap`` them for batches) are the parity
 reference; the serving hot path uses the batch-native ``*_batch`` engines
 below, whose inner loops issue ONE batched RMQ / conjunctive-scan per step
-across all B lanes and can route through the Pallas kernels
-(``kernels/rmq``, ``kernels/intersect``) — ISSUE 2 tentpole.
+across all B lanes and can route through the Pallas kernels — per-pop
+``kernels/rmq`` and ``kernels/intersect`` (ISSUE 2), or the whole
+single-term trip loop fused into ``kernels/heap_topk`` when the index
+statically fits VMEM (ISSUE 3; see the ROADMAP kernel-routing policy).
 Results are docids, ascending == best-score-first; INF_DOCID pads.
 """
 from __future__ import annotations
@@ -272,136 +274,80 @@ def complete_conjunctive(index, completions, rmq_minimal,
 # batch. Outputs are bit-identical to ``vmap``-ing the per-query reference
 # (tests/test_batched_engines.py).
 # ==========================================================================
-def _single_term_batch_state(rmq_minimal: RangeMin, term_lo, term_hi, k: int,
-                             iters: int, *, use_kernel: bool,
-                             interpret: bool | None):
-    """Batched dense-slot heap state: every array is [B, cap]."""
-    B = term_lo.shape[0]
-    cap = 2 * iters + 1
-    hi_incl = term_hi - 1
-    pos0, val0 = rmq_minimal.query_batch(term_lo, hi_incl,
-                                         use_kernel=use_kernel,
-                                         interpret=interpret)
-    kind = jnp.zeros((B, cap), jnp.int32)
-    lo_a = jnp.zeros((B, cap), jnp.int32).at[:, 0].set(term_lo)
-    hi_a = jnp.full((B, cap), -1, jnp.int32).at[:, 0].set(hi_incl)
-    pos_a = jnp.zeros((B, cap), jnp.int32).at[:, 0].set(pos0)
-    val_a = jnp.full((B, cap), INF_DOCID, jnp.int32).at[:, 0].set(
-        jnp.where(term_lo <= hi_incl, val0, INF_DOCID))
-    out = jnp.full((B, k), INF_DOCID, jnp.int32)
-    n_out = jnp.zeros((B,), jnp.int32)
-    prev = jnp.full((B,), -1, jnp.int32)
-    return (kind, lo_a, hi_a, pos_a, val_a, out, n_out, prev)
+# VMEM ceiling for the heap_topk kernel: the engine's source arrays (RMQ
+# values + sparse table + ib windows as int32, offsets, postings) stay
+# resident for the whole launch, so they must fit on-chip with headroom for
+# the heap scratch. Larger corpora keep the per-pop batched-RMQ path.
+HEAP_KERNEL_MAX_BYTES = 12 << 20
 
 
-def _single_term_batch_body(index: InvertedIndex, rmq_minimal: RangeMin,
-                            k: int, *, use_kernel: bool,
-                            interpret: bool | None):
-    """One batched pop: mirrors ``_single_term_body`` lane-for-lane but with
-    one 2B-lane RMQ and one fused gather per source array per trip."""
-    n_post = index.postings.shape[0]
-
-    def body(i, state):
-        kind, lo_a, hi_a, pos_a, val_a, out, n_out, prev = state
-        B = prev.shape[0]
-        rows = jnp.arange(B)
-        nf = 1 + 2 * i                         # next free slot (data-independent)
-        best = jnp.argmin(val_a, axis=1)
-        bval = val_a[rows, best]
-        found = bval < INF_DOCID
-        is_range = kind[rows, best] == 0
-        # ---- emit (dedup against previous emission) ----
-        emit = found & (bval != prev)
-        out = out.at[rows, jnp.where(emit, n_out, k)].set(bval, mode="drop")
-        n_out = n_out + emit.astype(jnp.int32)
-        prev = jnp.where(found, bval, prev)
-        # ---- one batched RMQ for both split subranges of every lane ----
-        tstar = pos_a[rows, best]              # range: argmin term; iter: ptr
-        lo = lo_a[rows, best]
-        hi = hi_a[rows, best]
-        pos2, val2 = rmq_minimal.query_batch(
-            jnp.concatenate([lo, tstar + 1]),
-            jnp.concatenate([tstar - 1, hi]),
-            use_kernel=use_kernel, interpret=interpret)
-        lpos, rpos = pos2[:B], pos2[B:]
-        lval = jnp.where((lo <= tstar - 1) & found & is_range,
-                         val2[:B], INF_DOCID)
-        rval = jnp.where((tstar + 1 <= hi) & found & is_range,
-                         val2[B:], INF_DOCID)
-        # ---- one offsets gather: new iterator bounds + advance bound ----
-        ct = jnp.clip(tstar, 0, index.n_terms)
-        cl = jnp.clip(lo, 0, index.n_terms)    # iterator slots keep term in lo
-        offs = index.offsets[jnp.concatenate([ct, ct + 1, cl + 1])]
-        it_start, it_end, adv_end = offs[:B], offs[B:2 * B], offs[2 * B:]
-        it_ptr = it_start + 1                  # minimal was postings[start]
-        adv_ptr = tstar + 1                    # iterator pop: ptr + 1
-        # ---- one postings gather: instantiated + advanced iterator values ----
-        pv = index.postings[jnp.concatenate([
-            jnp.minimum(it_ptr, n_post - 1), jnp.minimum(adv_ptr, n_post - 1)])]
-        it_val = jnp.where((it_ptr < it_end) & found & is_range,
-                           pv[:B], INF_DOCID)
-        adv_val = jnp.where((adv_ptr < adv_end) & found & (~is_range),
-                            pv[B:], INF_DOCID)
-        # ---- write popped slot ----
-        kind = kind.at[rows, best].set(jnp.where(is_range, 0, 1))
-        lo_a = lo_a.at[rows, best].set(lo)
-        hi_a = hi_a.at[rows, best].set(jnp.where(is_range, tstar - 1, hi))
-        pos_a = pos_a.at[rows, best].set(jnp.where(is_range, lpos, adv_ptr))
-        val_a = val_a.at[rows, best].set(jnp.where(is_range, lval, adv_val))
-        # ---- two fresh slots (static columns; inactive unless a live range) ----
-        live = found & is_range
-        kind = kind.at[:, nf].set(0)
-        lo_a = lo_a.at[:, nf].set(tstar + 1)
-        hi_a = hi_a.at[:, nf].set(hi)
-        pos_a = pos_a.at[:, nf].set(rpos)
-        val_a = val_a.at[:, nf].set(jnp.where(live, rval, INF_DOCID))
-        kind = kind.at[:, nf + 1].set(1)
-        lo_a = lo_a.at[:, nf + 1].set(tstar)   # iterator: term id here
-        hi_a = hi_a.at[:, nf + 1].set(-1)
-        pos_a = pos_a.at[:, nf + 1].set(it_ptr)
-        val_a = val_a.at[:, nf + 1].set(jnp.where(live, it_val, INF_DOCID))
-        return kind, lo_a, hi_a, pos_a, val_a, out, n_out, prev
-
-    return body
+def _heap_kernel_fits(index: InvertedIndex, rmq_minimal: RangeMin) -> bool:
+    """Static (shape-level) VMEM-fit check for the heap_topk kernel."""
+    b = 4 * (rmq_minimal.values.size + rmq_minimal.st_pos.size
+             + rmq_minimal.ib.size          # ib is widened to int32 in-kernel
+             + index.offsets.size + index.postings.size)
+    return b <= HEAP_KERNEL_MAX_BYTES
 
 
 def single_term_topk_bounded_batch(index: InvertedIndex,
                                    rmq_minimal: RangeMin, term_lo, term_hi,
                                    k: int, trips: int, *,
                                    use_kernel: bool = False,
-                                   interpret: bool | None = None):
+                                   interpret: bool | None = None,
+                                   heap_kernel: bool | None = None):
     """Batch-native ``single_term_topk_bounded``: term_lo/hi int32[B].
 
     Returns (out int32[B, k], done bool[B]), bit-identical to vmap of the
-    per-query engine. ``use_kernel`` routes every pop's RMQ through the
-    Pallas kernel (TPU); the default XLA path is the in-block-window
-    gather formulation of ``RangeMin.query_batch``.
+    per-query engine. Kernel routing (ROADMAP PR 3): ``use_kernel=True``
+    first tries the fused heap_topk kernel — the WHOLE trip loop in one
+    Pallas launch with the heap state in VMEM scratch — whenever the
+    engine's source arrays statically fit on-chip; otherwise each pop's RMQ
+    dispatches to the batched-RMQ kernel. ``heap_kernel`` overrides the
+    automatic fit gate (None = auto; True forces the heap_topk subsystem,
+    whose ops layer still honors ``use_kernel`` for its Pallas-vs-XLA
+    choice). The default XLA path is the in-block-window gather formulation
+    of ``RangeMin.query_batch``.
     """
     trips = min(trips, 2 * k)
-    state = _single_term_batch_state(rmq_minimal, term_lo, term_hi, k, trips,
-                                     use_kernel=use_kernel,
-                                     interpret=interpret)
-    state = lax.fori_loop(
-        0, trips,
-        _single_term_batch_body(index, rmq_minimal, k, use_kernel=use_kernel,
-                                interpret=interpret),
-        state)
-    val_a, out, n_out = state[4], state[5], state[6]
     bad = term_lo >= term_hi
-    done = (bad | (n_out >= k) | (jnp.min(val_a, axis=1) >= INF_DOCID)
-            | (trips >= 2 * k))
+    if heap_kernel is None:
+        heap_kernel = use_kernel and _heap_kernel_fits(index, rmq_minimal)
+    if heap_kernel:
+        from ..kernels.heap_topk.ops import heap_topk
+
+        out, done = heap_topk(
+            rmq_minimal.values, rmq_minimal.st_pos, rmq_minimal.ib,
+            index.offsets, index.postings, term_lo, term_hi,
+            k=k, trips=trips, n=rmq_minimal.n, n_terms=index.n_terms,
+            use_kernel=use_kernel, interpret=interpret)
+    else:
+        # same engine loop, one pop at a time (the ONE copy lives in
+        # kernels/heap_topk/ref.py); the rmq_fn hook lets each pop's 2B-lane
+        # RMQ route through the batched-RMQ Pallas kernel or the XLA
+        # gather formulation per ``use_kernel``
+        from ..kernels.heap_topk.ref import heap_topk_ref
+
+        out, done = heap_topk_ref(
+            rmq_minimal.values, rmq_minimal.st_pos, rmq_minimal.ib,
+            index.offsets, index.postings, term_lo, term_hi,
+            k=k, trips=trips, n=rmq_minimal.n, n_terms=index.n_terms,
+            rmq_fn=lambda p, q: rmq_minimal.query_batch(
+                p, q, use_kernel=use_kernel, interpret=interpret))
+    done = bad | done | (trips >= 2 * k)
     return jnp.where(bad[:, None], INF_DOCID, out), done
 
 
 def single_term_topk_batch(index: InvertedIndex, rmq_minimal: RangeMin,
                            term_lo, term_hi, k: int, *,
                            use_kernel: bool = False,
-                           interpret: bool | None = None):
+                           interpret: bool | None = None,
+                           heap_kernel: bool | None = None):
     """Batch-native ``single_term_topk`` (full 2k-trip budget, always exact)."""
     out, _ = single_term_topk_bounded_batch(index, rmq_minimal, term_lo,
                                             term_hi, k, 2 * k,
                                             use_kernel=use_kernel,
-                                            interpret=interpret)
+                                            interpret=interpret,
+                                            heap_kernel=heap_kernel)
     return out
 
 
@@ -419,7 +365,7 @@ def conjunctive_multi_batch(index: InvertedIndex, completions, prefix_ids,
                             *, tile: int = 128, max_tiles: int = 4096,
                             use_kernel: bool = False,
                             interpret: bool | None = None,
-                            list_pad: int = 8192):
+                            list_pad: int = 8192, probe_iters: int = 0):
     """Batch-native ``conjunctive_multi``: prefix_ids int32[B, PMAX], the
     rest int32[B]. Bit-identical to vmap of the per-query engine.
 
@@ -432,6 +378,15 @@ def conjunctive_multi_batch(index: InvertedIndex, completions, prefix_ids,
     host visibility (serve/frontend.py) check the bound before dispatching.
     Per-lane progress is masked exactly like vmap's batched ``while_loop``:
     a finished lane stops advancing while others continue.
+
+    The XLA probes run as PMAX sequential [B, tile] ranged searches — one
+    per prefix slot — NOT one [B, PMAX, tile] fused search: the fused form's
+    per-iteration temporaries blow the cache on CPU (measured 4.5x slower at
+    B=256) while the per-slot form keeps the tile resident; the results are
+    bit-identical (PR 3 fused-path regression fix). ``probe_iters`` caps the
+    binary-search depth — callers that host-verify the longest probe list
+    (serve/frontend.py) pass ``log2(list_pad)+1`` instead of the global
+    ``log2(n_postings)+1`` bound; 0 keeps the global bound.
     """
     B, PMAX = prefix_ids.shape
     rows = jnp.arange(B)
@@ -484,18 +439,19 @@ def conjunctive_multi_batch(index: InvertedIndex, completions, prefix_ids,
                 use_kernel=True, interpret=interpret)
             hits = mask & in_list & ~lane_dead[:, None]
         else:
-            # ONE fused [B, PMAX, T] ranged search probes every candidate
-            # into every prefix list simultaneously (vs PMAX sequential
-            # per-list searches under the scalar/vmap form)
-            sh = (B, PMAX, tile)
-            pos = ranged_searchsorted(
-                index.postings, jnp.broadcast_to(cand[:, None, :], sh),
-                jnp.broadcast_to(starts[:, :, None], sh),
-                jnp.broadcast_to(ends[:, :, None], sh), side="left")
-            hit = (pos < ends[:, :, None]) & (
-                index.postings[jnp.minimum(pos, n_post - 1)]
-                == cand[:, None, :])
-            member = jnp.all(hit | ~need[:, :, None], axis=1)
+            # PMAX sequential [B, T] ranged searches (cache-resident tiles;
+            # see the docstring) — bit-identical to the fused [B, PMAX, T]
+            # form and to the scalar/vmap per-list probes
+            member = jnp.ones((B, tile), bool)
+            for j in range(PMAX):
+                pos = ranged_searchsorted(
+                    index.postings, cand,
+                    jnp.broadcast_to(starts[:, j:j + 1], (B, tile)),
+                    jnp.broadcast_to(ends[:, j:j + 1], (B, tile)),
+                    side="left", max_iters=probe_iters)
+                hit = (pos < ends[:, j:j + 1]) & (
+                    index.postings[jnp.minimum(pos, n_post - 1)] == cand)
+                member &= jnp.where(need[:, j:j + 1], hit, True)
             fwd_rows = _extract_rows(completions, cand)             # [B, T, M]
             fwd_ok = jnp.any((fwd_rows >= term_lo[:, None, None])
                              & (fwd_rows < term_hi[:, None, None]), axis=2)
@@ -522,24 +478,44 @@ def conjunctive_multi_batch(index: InvertedIndex, completions, prefix_ids,
 def complete_conjunctive_batch(index, completions, rmq_minimal,
                                prefix_ids, prefix_len, term_lo, term_hi,
                                k: int, *, use_kernel: bool = False,
-                               interpret: bool | None = None, **kw):
+                               interpret: bool | None = None,
+                               heap_kernel: bool | None = None, **kw):
     """Batch-native fused Complete(): both engines + branchless select.
 
     The fallback for call sites that cannot partition by query class (the
     shard_map striped path, mixed jit-only batches); class-pure traffic
     should go through ``serve.frontend.QACFrontend``.
 
-    ``use_kernel`` routes only the single-term RMQ through Pallas. The
-    intersect kernel is deliberately NOT enabled here: it is only correct
-    when every probe list fits its static ``list_pad``, a bound that needs
-    host visibility — jit-only call sites cannot verify it, so they keep
-    the XLA probe path (see the ROADMAP kernel-routing policy).
+    Each engine runs under a ``lax.cond`` on whether its class is present
+    at all, so a class-pure batch (every lane single-term, or every lane
+    multi-term) skips the other engine entirely instead of computing and
+    discarding it — the jit-only analogue of the frontend's host routing
+    (PR 3 fused-path fix). Mixed batches still pay for both engines; the
+    select stays branchless and bit-identical either way, because a lane
+    only ever reads the engine of its own class.
+
+    ``use_kernel`` routes the single-term engine through Pallas (the fused
+    heap_topk kernel when the index statically fits VMEM, else the per-pop
+    batched-RMQ kernel). The intersect kernel is deliberately NOT enabled
+    here: it is only correct when every probe list fits its static
+    ``list_pad``, a bound that needs host visibility — jit-only call sites
+    cannot verify it, so they keep the XLA probe path (see the ROADMAP
+    kernel-routing policy).
     """
-    multi = conjunctive_multi_batch(index, completions, prefix_ids,
-                                    prefix_len, term_lo, term_hi, k,
-                                    use_kernel=False,
-                                    interpret=interpret, **kw)
-    single = single_term_topk_batch(index, rmq_minimal, term_lo, term_hi, k,
-                                    use_kernel=use_kernel,
-                                    interpret=interpret)
-    return jnp.where((prefix_len > 0)[:, None], multi, single)
+    is_multi = prefix_len > 0
+    absent = jnp.full((prefix_len.shape[0], k), INF_DOCID, jnp.int32)
+    multi = lax.cond(
+        jnp.any(is_multi),
+        lambda: conjunctive_multi_batch(index, completions, prefix_ids,
+                                        prefix_len, term_lo, term_hi, k,
+                                        use_kernel=False,
+                                        interpret=interpret, **kw),
+        lambda: absent)
+    single = lax.cond(
+        jnp.any(~is_multi),
+        lambda: single_term_topk_batch(index, rmq_minimal, term_lo, term_hi,
+                                       k, use_kernel=use_kernel,
+                                       interpret=interpret,
+                                       heap_kernel=heap_kernel),
+        lambda: absent)
+    return jnp.where(is_multi[:, None], multi, single)

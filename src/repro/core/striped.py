@@ -107,6 +107,22 @@ def build_striped(term_rows: np.ndarray, docid_of_row: np.ndarray,
     )
 
 
+def local_heap_kernel_fits(striped: StripedQACIndex) -> bool:
+    """Host-side preview of the heap_topk routing for one stripe.
+
+    The single-term engine routes its whole trip loop to the fused heap
+    kernel only when the stripe-local RMQ tables + index arrays statically
+    fit VMEM (``core.search._heap_kernel_fits``); this mirrors that check on
+    the stacked arrays so launchers/benches can report which route the
+    shard_map body will take without tracing it.
+    """
+    from .search import _heap_kernel_fits
+
+    idx, _, rmq = local_index(
+        jax.tree_util.tree_map(lambda a: a[:1], striped))
+    return _heap_kernel_fits(idx, rmq)
+
+
 def local_index(striped: StripedQACIndex):
     """Inside shard_map (leading stripe dim == 1): reconstruct local views."""
     idx = InvertedIndex(

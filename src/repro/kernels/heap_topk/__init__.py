@@ -1,0 +1,1 @@
+from .ops import heap_topk  # noqa: F401

@@ -1,0 +1,206 @@
+"""Pallas TPU kernel: the entire bounded-trip single-term engine (paper §3.3).
+
+One launch runs ALL ``trips`` heap pops of the single-term top-k engine for a
+tile of batch lanes, with the dense-slot heap arrays (kind/lo/hi/pos/val,
+``int32[bt, cap]``) living in VMEM scratch for the whole loop. Each trip fuses
+
+  * the pop (per-lane argmin over the cap slots),
+  * BOTH split-subrange RMQs — reading the sparse table and the ``ib``
+    in-block window table directly from VMEM (the same two-overlapping-window
+    formulation as ``RangeMin.query_batch``),
+  * the offsets/postings gathers that instantiate or advance the lazy
+    posting-list iterators.
+
+Under the PR-2 formulation every pop round-tripped the full [B, cap] heap
+state (5 int32 arrays) through HBM and issued a separate batched-RMQ
+dispatch: 2·trips fusion boundaries per batch. Here the heap state never
+leaves the core and there is exactly ONE kernel launch.
+
+Grid: one program per bt-lane tile. The RMQ/index source arrays (values,
+sparse table, ``ib`` windows, offsets, postings) are pinned to block 0 so
+every grid step reuses the same VMEM-resident copy. VMEM budget is the sum
+of those arrays plus 5·bt·cap·4 bytes of heap scratch; the caller
+(``core.search._heap_kernel_fits``) verifies the static fit before routing
+here — corpora whose tables exceed the budget keep the batched-RMQ path.
+
+Blocks (per program):
+  tlh      (bt, 2)          term_lo, hi_incl (= term_hi - 1) per lane
+  values   (1, n_pad)       RangeMin values (INF padded, 128-aligned)
+  st_pos   (levels, nb_pad) sparse-table argmin positions (row-padded)
+  ib       (IB_LEVELS, n_pad) in-block window argmin offsets (int32)
+  offsets  (1, v_pad)       inverted-index list boundaries
+  postings (1, p_pad)       concatenated docid lists (INF padded)
+  out      (bt, k)          emitted docids, ascending, INF padded
+  done     (bt, 1)          1 iff k emitted or heap exhausted
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import rmq_window_batch
+
+INF = 2**31 - 1
+BLOCK = 128
+
+
+def _kernel(tlh_ref, values_ref, st_ref, ib_ref, off_ref, post_ref,
+            out_ref, done_ref, kind_s, lo_s, hi_s, pos_s, val_s,
+            *, k, trips, n, levels, n_blocks, n_terms, n_post):
+    bt, cap = kind_s.shape
+    n_pad = values_ref.shape[1]
+    nb_pad = st_ref.shape[1]
+    values = values_ref[...].reshape(-1)
+    ib_flat = ib_ref[...].reshape(-1)
+    st_flat = st_ref[...].reshape(-1)
+    offsets = off_ref[...].reshape(-1)
+    postings = post_ref[...].reshape(-1)
+    rmq = functools.partial(rmq_window_batch, values, ib_flat, st_flat,
+                            n=n, levels=levels, n_blocks=n_blocks,
+                            nb_stride=nb_pad, n_pad=n_pad)
+    col = lax.broadcasted_iota(jnp.int32, (bt, cap), 1)
+    kcol = lax.broadcasted_iota(jnp.int32, (bt, k), 1)
+
+    # ---- initial heap: one live range slot [term_lo, hi_incl] per lane ----
+    tl = tlh_ref[:, 0]
+    hi_incl = tlh_ref[:, 1]
+    pos0, val0 = rmq(tl, hi_incl)
+    first = col == 0
+    kind_s[...] = jnp.zeros((bt, cap), jnp.int32)
+    lo_s[...] = jnp.where(first, tl[:, None], 0)
+    hi_s[...] = jnp.where(first, hi_incl[:, None], -1)
+    pos_s[...] = jnp.where(first, pos0[:, None], 0)
+    val_s[...] = jnp.where(
+        first, jnp.where(tl <= hi_incl, val0, INF)[:, None], INF)
+
+    def trip(i, carry):
+        out, n_out, prev = carry
+        kind = kind_s[...]
+        lo_a = lo_s[...]
+        hi_a = hi_s[...]
+        pos_a = pos_s[...]
+        val_a = val_s[...]
+        nf = 1 + 2 * i                       # next free slot (data-independent)
+        best = jnp.argmin(val_a, axis=1)[:, None]                 # [bt, 1]
+        bval = jnp.take_along_axis(val_a, best, axis=1)[:, 0]
+        found = bval < INF
+        is_range = jnp.take_along_axis(kind, best, axis=1)[:, 0] == 0
+        # ---- emit (dedup against previous emission) ----
+        emit = found & (bval != prev)
+        out = jnp.where((kcol == n_out[:, None]) & emit[:, None],
+                        bval[:, None], out)
+        n_out = n_out + emit.astype(jnp.int32)
+        prev = jnp.where(found, bval, prev)
+        # ---- both split-subrange RMQs, fused (one [2bt] call) ----
+        tstar = jnp.take_along_axis(pos_a, best, axis=1)[:, 0]
+        lo = jnp.take_along_axis(lo_a, best, axis=1)[:, 0]
+        hi = jnp.take_along_axis(hi_a, best, axis=1)[:, 0]
+        pos2, val2 = rmq(jnp.concatenate([lo, tstar + 1]),
+                         jnp.concatenate([tstar - 1, hi]))
+        lpos, rpos = pos2[:bt], pos2[bt:]
+        lval = jnp.where((lo <= tstar - 1) & found & is_range,
+                         val2[:bt], INF)
+        rval = jnp.where((tstar + 1 <= hi) & found & is_range,
+                         val2[bt:], INF)
+        # ---- offsets gather: new iterator bounds + advance bound ----
+        # offsets has n_terms+2 entries (lane-padded further by ops.py), so
+        # the clipped ct+1 / cl+1 indices stay in bounds
+        ct = jnp.clip(tstar, 0, n_terms)
+        cl = jnp.clip(lo, 0, n_terms)        # iterator slots keep term in lo
+        offs3 = offsets[jnp.concatenate([ct, ct + 1, cl + 1])]
+        it_start, it_end, adv_end = offs3[:bt], offs3[bt:2 * bt], offs3[2 * bt:]
+        it_ptr = it_start + 1                # minimal was postings[start]
+        adv_ptr = tstar + 1                  # iterator pop: ptr + 1
+        # ---- postings gather: instantiated + advanced iterator values ----
+        pv = postings[jnp.concatenate([jnp.minimum(it_ptr, n_post - 1),
+                                       jnp.minimum(adv_ptr, n_post - 1)])]
+        it_val = jnp.where((it_ptr < it_end) & found & is_range,
+                           pv[:bt], INF)
+        adv_val = jnp.where((adv_ptr < adv_end) & found & (~is_range),
+                            pv[bt:], INF)
+        # ---- write popped slot (masked column scatter) ----
+        bm = col == best
+        kind = jnp.where(bm, jnp.where(is_range, 0, 1)[:, None], kind)
+        lo_a = jnp.where(bm, lo[:, None], lo_a)
+        hi_a = jnp.where(bm, jnp.where(is_range, tstar - 1, hi)[:, None], hi_a)
+        pos_a = jnp.where(bm, jnp.where(is_range, lpos, adv_ptr)[:, None],
+                          pos_a)
+        val_a = jnp.where(bm, jnp.where(is_range, lval, adv_val)[:, None],
+                          val_a)
+        # ---- two fresh slots (static columns; live only after a range pop) --
+        live = found & is_range
+        fm1 = col == nf
+        kind = jnp.where(fm1, 0, kind)
+        lo_a = jnp.where(fm1, (tstar + 1)[:, None], lo_a)
+        hi_a = jnp.where(fm1, hi[:, None], hi_a)
+        pos_a = jnp.where(fm1, rpos[:, None], pos_a)
+        val_a = jnp.where(fm1, jnp.where(live, rval, INF)[:, None], val_a)
+        fm2 = col == nf + 1
+        kind = jnp.where(fm2, 1, kind)
+        lo_a = jnp.where(fm2, tstar[:, None], lo_a)  # iterator: term id here
+        hi_a = jnp.where(fm2, -1, hi_a)
+        pos_a = jnp.where(fm2, it_ptr[:, None], pos_a)
+        val_a = jnp.where(fm2, jnp.where(live, it_val, INF)[:, None], val_a)
+        kind_s[...] = kind
+        lo_s[...] = lo_a
+        hi_s[...] = hi_a
+        pos_s[...] = pos_a
+        val_s[...] = val_a
+        return out, n_out, prev
+
+    out0 = jnp.full((bt, k), INF, jnp.int32)
+    z = jnp.zeros((bt,), jnp.int32)
+    out, n_out, _ = lax.fori_loop(0, trips, trip, (out0, z, z - 1))
+    out_ref[...] = out
+    done_ref[:, 0] = ((n_out >= k)
+                      | (jnp.min(val_s[...], axis=1) >= INF)).astype(jnp.int32)
+
+
+def heap_topk_kernel(tlh, values, st_pos, ib, offsets, postings, *,
+                     k: int, trips: int, n: int, n_terms: int, n_post: int,
+                     block_b: int = 128, interpret: bool | None = None):
+    """tlh int32[B, 2] = (term_lo, term_hi - 1); the index/RMQ arrays are
+    2-D, 128-lane padded (see ops.py). Returns (out int32[B, k],
+    done int32[B, 1]). ``interpret=None`` resolves platform-aware (real
+    lowering on TPU, interpreter elsewhere)."""
+    if interpret is None:
+        from ...compat import pallas_interpret_default
+
+        interpret = pallas_interpret_default()
+    B = tlh.shape[0]
+    levels, nb_pad = st_pos.shape
+    n_pad = values.shape[1]
+    bt = min(block_b, B)
+    assert B % bt == 0
+    cap = 2 * trips + 1
+    n_blocks = n_pad // BLOCK
+    kernel = functools.partial(_kernel, k=k, trips=trips, n=n, levels=levels,
+                               n_blocks=n_blocks, n_terms=n_terms,
+                               n_post=n_post)
+    return pl.pallas_call(
+        kernel,
+        grid=(B // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, 2), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_pad), lambda i: (0, 0)),
+            pl.BlockSpec((levels, nb_pad), lambda i: (0, 0)),
+            pl.BlockSpec(ib.shape, lambda i: (0, 0)),
+            pl.BlockSpec(offsets.shape, lambda i: (0, 0)),
+            pl.BlockSpec(postings.shape, lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bt, cap), jnp.int32) for _ in range(5)],
+        interpret=interpret,
+    )(tlh, values, st_pos, ib, offsets, postings)

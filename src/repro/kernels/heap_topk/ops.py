@@ -1,0 +1,74 @@
+"""Public jit'd wrapper: the whole bounded-trip single-term engine.
+
+``heap_topk`` runs all ``trips`` heap pops of the paper's §3.3 single-term
+engine in ONE dispatch: either the Pallas kernel (heap state in VMEM scratch,
+in-kernel RMQ + iterator gathers — zero HBM heap traffic) or the XLA batched
+reference (ref.py, the PR-2 per-pop batched-RMQ formulation). The two are
+bit-identical in ``out`` and ``done``; ``core.search`` routes between them
+and the per-pop batched-RMQ path (ROADMAP kernel-routing policy).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...compat import pallas_interpret_default
+from .kernel import heap_topk_kernel, BLOCK
+from .ref import heap_topk_ref
+
+
+def _pad_lanes(a, mult=BLOCK, fill=0):
+    """Pad a 1-D array to a lane multiple (VMEM-friendly 2-D reshape)."""
+    pad = (-a.shape[0]) % mult
+    if pad:
+        a = jnp.pad(a, (0, pad), constant_values=fill)
+    return a.reshape(1, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "trips", "n", "n_terms",
+                                             "use_kernel", "interpret",
+                                             "block_b"))
+def heap_topk(values, st_pos, ib, offsets, postings, term_lo, term_hi, *,
+              k: int, trips: int, n: int, n_terms: int,
+              use_kernel: bool = True, interpret: bool | None = None,
+              block_b: int = 128):
+    """Bounded-trip single-term top-k -> (out int32[B, k], done bool[B]).
+
+    values/st_pos/ib: the ``RangeMin`` arrays over the ``minimal`` array
+    (``n`` its true length); offsets/postings: the inverted index; term
+    ranges [term_lo, term_hi) per lane. ``done`` is True iff k docids were
+    emitted or the heap is exhausted — the caller ORs in its bad-range and
+    full-budget conditions. ``interpret=None`` resolves platform-aware.
+    """
+    if interpret is None:
+        interpret = pallas_interpret_default()
+    if not use_kernel or n == 0:
+        return heap_topk_ref(values, st_pos, ib, offsets, postings,
+                             term_lo, term_hi, k=k, trips=trips, n=n,
+                             n_terms=n_terms)
+    B = term_lo.shape[0]
+    n_post = postings.shape[0]
+    bt = min(block_b, B)
+    pad = (-B) % bt
+    tl = term_lo.astype(jnp.int32)
+    hi_incl = term_hi.astype(jnp.int32) - 1
+    if pad:  # dead lanes: empty range -> INF out, done immediately
+        tl = jnp.pad(tl, (0, pad), constant_values=1)
+        hi_incl = jnp.pad(hi_incl, (0, pad), constant_values=-1)
+    tlh = jnp.stack([tl, hi_incl], axis=1)
+    levels, nb = st_pos.shape
+    st_p = st_pos
+    if nb % BLOCK:  # lane-pad columns; flat gathers use the padded stride
+        st_p = jnp.pad(st_pos, ((0, 0), (0, (-nb) % BLOCK)))
+    out, done = heap_topk_kernel(
+        tlh,
+        values.reshape(1, -1),
+        st_p,
+        ib.astype(jnp.int32),
+        _pad_lanes(offsets),
+        _pad_lanes(postings, fill=2**31 - 1),
+        k=k, trips=trips, n=n, n_terms=n_terms, n_post=n_post,
+        block_b=bt, interpret=interpret)
+    return out[:B], done[:B, 0].astype(jnp.bool_)

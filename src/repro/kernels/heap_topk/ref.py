@@ -1,0 +1,117 @@
+"""Pure-jnp oracle for the on-chip single-term top-k kernel.
+
+The PR-2 batched formulation of the bounded-trip single-term engine
+(paper §3.3), expressed directly on the raw index/RMQ arrays: each trip pops
+the per-lane min slot, issues one batched RMQ over the 2B split subranges
+(the two-overlapping-window ``ib`` formulation of ``RangeMin.query_batch``),
+and gathers the offsets/postings iterator state. This is the ONE copy of
+the engine loop: the kernel's parity oracle, the off-TPU path of
+``ops.heap_topk``, AND (via the ``rmq_fn`` hook, which lets
+``core.search`` route each pop's RMQ through the batched-RMQ Pallas
+kernel) the body behind ``single_term_topk_bounded_batch``'s non-fused
+routes.
+
+Semantics: term ranges [term_lo, term_hi) per lane; returns
+(out int32[B, k] ascending INF-padded, done bool[B]) where ``done`` is True
+iff k docids were emitted or the heap is exhausted (the caller ORs in its
+``bad``-range and full-budget conditions).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from ..rmq.ref import rmq_window_batch  # noqa: F401  (re-export: kernel.py)
+
+INF = 2**31 - 1
+
+
+def _rmq_batch_ref(values, ib, st_pos, n, p, q):
+    levels, n_blocks = st_pos.shape
+    return rmq_window_batch(values, ib.reshape(-1), st_pos.reshape(-1), p, q,
+                            n=n, levels=levels, n_blocks=n_blocks,
+                            nb_stride=n_blocks, n_pad=values.shape[0])
+
+
+def heap_topk_ref(values, st_pos, ib, offsets, postings, term_lo, term_hi,
+                  *, k: int, trips: int, n: int, n_terms: int, rmq_fn=None):
+    """The batched bounded-trip engine on raw arrays -> (out, done).
+
+    ``rmq_fn(p, q) -> (pos, val)`` overrides the split-subrange RMQ (same
+    contract as ``RangeMin.query_batch``); None uses the in-module XLA
+    window formulation.
+    """
+    if rmq_fn is None:
+        rmq_fn = lambda p, q: _rmq_batch_ref(values, ib, st_pos, n, p, q)
+    B = term_lo.shape[0]
+    rows = jnp.arange(B)
+    cap = 2 * trips + 1
+    n_post = postings.shape[0]
+    hi_incl = term_hi - 1
+    pos0, val0 = rmq_fn(term_lo, hi_incl)
+    kind = jnp.zeros((B, cap), jnp.int32)
+    lo_a = jnp.zeros((B, cap), jnp.int32).at[:, 0].set(term_lo)
+    hi_a = jnp.full((B, cap), -1, jnp.int32).at[:, 0].set(hi_incl)
+    pos_a = jnp.zeros((B, cap), jnp.int32).at[:, 0].set(pos0)
+    val_a = jnp.full((B, cap), INF, jnp.int32).at[:, 0].set(
+        jnp.where(term_lo <= hi_incl, val0, INF))
+    out = jnp.full((B, k), INF, jnp.int32)
+    n_out = jnp.zeros((B,), jnp.int32)
+    prev = jnp.full((B,), -1, jnp.int32)
+
+    def body(i, state):
+        kind, lo_a, hi_a, pos_a, val_a, out, n_out, prev = state
+        nf = 1 + 2 * i
+        best = jnp.argmin(val_a, axis=1)
+        bval = val_a[rows, best]
+        found = bval < INF
+        is_range = kind[rows, best] == 0
+        emit = found & (bval != prev)
+        out = out.at[rows, jnp.where(emit, n_out, k)].set(bval, mode="drop")
+        n_out = n_out + emit.astype(jnp.int32)
+        prev = jnp.where(found, bval, prev)
+        tstar = pos_a[rows, best]
+        lo = lo_a[rows, best]
+        hi = hi_a[rows, best]
+        pos2, val2 = rmq_fn(jnp.concatenate([lo, tstar + 1]),
+                            jnp.concatenate([tstar - 1, hi]))
+        lpos, rpos = pos2[:B], pos2[B:]
+        lval = jnp.where((lo <= tstar - 1) & found & is_range,
+                         val2[:B], INF)
+        rval = jnp.where((tstar + 1 <= hi) & found & is_range,
+                         val2[B:], INF)
+        ct = jnp.clip(tstar, 0, n_terms)
+        cl = jnp.clip(lo, 0, n_terms)
+        offs = offsets[jnp.concatenate([ct, ct + 1, cl + 1])]
+        it_start, it_end, adv_end = offs[:B], offs[B:2 * B], offs[2 * B:]
+        it_ptr = it_start + 1
+        adv_ptr = tstar + 1
+        pv = postings[jnp.concatenate([
+            jnp.minimum(it_ptr, n_post - 1), jnp.minimum(adv_ptr, n_post - 1)])]
+        it_val = jnp.where((it_ptr < it_end) & found & is_range,
+                           pv[:B], INF)
+        adv_val = jnp.where((adv_ptr < adv_end) & found & (~is_range),
+                            pv[B:], INF)
+        kind = kind.at[rows, best].set(jnp.where(is_range, 0, 1))
+        lo_a = lo_a.at[rows, best].set(lo)
+        hi_a = hi_a.at[rows, best].set(jnp.where(is_range, tstar - 1, hi))
+        pos_a = pos_a.at[rows, best].set(jnp.where(is_range, lpos, adv_ptr))
+        val_a = val_a.at[rows, best].set(jnp.where(is_range, lval, adv_val))
+        live = found & is_range
+        kind = kind.at[:, nf].set(0)
+        lo_a = lo_a.at[:, nf].set(tstar + 1)
+        hi_a = hi_a.at[:, nf].set(hi)
+        pos_a = pos_a.at[:, nf].set(rpos)
+        val_a = val_a.at[:, nf].set(jnp.where(live, rval, INF))
+        kind = kind.at[:, nf + 1].set(1)
+        lo_a = lo_a.at[:, nf + 1].set(tstar)
+        hi_a = hi_a.at[:, nf + 1].set(-1)
+        pos_a = pos_a.at[:, nf + 1].set(it_ptr)
+        val_a = val_a.at[:, nf + 1].set(jnp.where(live, it_val, INF))
+        return kind, lo_a, hi_a, pos_a, val_a, out, n_out, prev
+
+    state = (kind, lo_a, hi_a, pos_a, val_a, out, n_out, prev)
+    state = lax.fori_loop(0, trips, body, state)
+    val_a, out, n_out = state[4], state[5], state[6]
+    done = (n_out >= k) | (jnp.min(val_a, axis=1) >= INF)
+    return out, done

@@ -46,3 +46,68 @@ def rmq_query_ref(pq, lblock, rblock, st_pos, st_val, n_blocks):
         return pos[best], val[best]
 
     return jax.vmap(one)(pq, lblock, rblock)
+
+
+def rmq_window_batch(values_flat, ib_flat, st_flat, p, q, *, n: int,
+                     levels: int, n_blocks: int, nb_stride: int, n_pad: int):
+    """(pos, val) of argmin over values[p[i]..q[i]] inclusive — the XLA
+    in-block-window formulation (``RangeMin.query_batch`` contract: ``val``
+    bit-identical to the scalar query, ``pos`` whenever ``val < INF``).
+
+    The ONE transcription of the two-overlapping-window math shared by this
+    oracle and the Pallas kernel body (which calls it on its VMEM-resident
+    flat tables). All inputs are flat 1-D: ``ib_flat`` is the ``[7, n_pad]``
+    table row-major (any int dtype; widened here), ``st_flat`` the sparse
+    table with row stride ``nb_stride`` (= ``n_blocks``, or the lane-padded
+    width when the kernel pads the table columns).
+    """
+    p = jnp.clip(p, 0, max(n - 1, 0)).astype(jnp.int32)
+    qc = jnp.clip(q, 0, max(n - 1, 0)).astype(jnp.int32)
+    invalid = (p > qc) | (n == 0)
+    bp, bq = p // BLOCK, qc // BLOCK
+    same = bp == bq
+    lo1 = p
+    hi1 = jnp.maximum(jnp.where(same, qc, bp * BLOCK + (BLOCK - 1)), p)
+    lo2, hi2 = bq * BLOCK, qc
+    j1 = 31 - lax.clz(jnp.maximum(hi1 - lo1 + 1, 1))
+    j2 = 31 - lax.clz(jnp.maximum(hi2 - lo2 + 1, 1))
+    s1 = hi1 - (1 << j1) + 1
+    s2 = hi2 - (1 << j2) + 1
+    ib_idx = jnp.concatenate([
+        jnp.maximum(j1 - 1, 0) * n_pad + lo1,
+        jnp.maximum(j1 - 1, 0) * n_pad + s1,
+        jnp.maximum(j2 - 1, 0) * n_pad + lo2,
+        jnp.maximum(j2 - 1, 0) * n_pad + s2,
+    ])
+    offs = jnp.where(jnp.concatenate([j1, j1, j2, j2]) == 0, 0,
+                     ib_flat[ib_idx].astype(jnp.int32))
+    pos_w = jnp.concatenate([lo1, s1, lo2, s2]) + offs
+    cnt = bq - bp - 1
+    has_mid = cnt > 0
+    jm = jnp.where(has_mid, 31 - lax.clz(jnp.maximum(cnt, 1)), 0)
+    jc = jnp.minimum(jm, levels - 1)
+    lo_b = jnp.minimum(bp + 1, n_blocks - 1)
+    hi_b = jnp.clip(bq - (1 << jc), 0, n_blocks - 1)
+    pos_st = st_flat[jnp.concatenate([jc * nb_stride + lo_b,
+                                      jc * nb_stride + hi_b])]
+    m = p.shape[0]
+    vals6 = values_flat[jnp.concatenate([pos_w, pos_st])]
+    v1a, v1b = vals6[:m], vals6[m:2 * m]
+    v2a, v2b = vals6[2 * m:3 * m], vals6[3 * m:4 * m]
+    c3_val, c4_val = vals6[4 * m:5 * m], vals6[5 * m:]
+    p1a, p1b = pos_w[:m], pos_w[m:2 * m]
+    p2a, p2b = pos_w[2 * m:3 * m], pos_w[3 * m:]
+    c3_pos, c4_pos = pos_st[:m], pos_st[m:]
+    c1_pos = jnp.where(v1b < v1a, p1b, p1a)
+    c1_val = jnp.minimum(v1a, v1b)
+    c2_pos = jnp.where(v2b < v2a, p2b, p2a)
+    c2_val = jnp.where(same, INF, jnp.minimum(v2a, v2b))
+    c3_val = jnp.where(has_mid, c3_val, INF)
+    c4_val = jnp.where(has_mid, c4_val, INF)
+    p12 = jnp.where(c2_val < c1_val, c2_pos, c1_pos)
+    v12 = jnp.minimum(c1_val, c2_val)
+    p34 = jnp.where(c4_val < c3_val, c4_pos, c3_pos)
+    v34 = jnp.minimum(c3_val, c4_val)
+    pos = jnp.where(v34 < v12, p34, p12)
+    val = jnp.where(invalid, INF, jnp.minimum(v12, v34))
+    return pos.astype(jnp.int32), val.astype(jnp.int32)

@@ -80,6 +80,12 @@ def main():
         d_of_row = np.empty(len(rows), dtype=np.int32)
         d_of_row[order] = np.arange(len(rows), dtype=np.int32)
         striped = build_striped(rows, d_of_row, dictionary.n_terms, args.stripes)
+        from repro.core.striped import local_heap_kernel_fits
+        route = ("heap_topk kernel" if local_heap_kernel_fits(striped)
+                 else "per-pop batched RMQ kernel")
+        if jax.default_backend() != "tpu":
+            route += " on TPU; per-pop XLA query_batch on this backend"
+        print(f"[serve] single-term route per stripe: {route}")
         fn = jax.jit(lambda a, b, c, d: qac_serve_striped(
             striped, qidx.dictionary, a, b, c, d, k=args.k))
     else:

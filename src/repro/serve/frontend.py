@@ -39,9 +39,9 @@ from .qac import serve_single_term, serve_single_term_full, serve_multi_term
 # frontend falls back to the XLA probe path for the multi-term class.
 MAX_LIST_PAD = 1 << 15
 # HBM budget for the [B, PMAX, list_pad] probe-list gather the kernel path
-# materializes per multi-term dispatch; buckets whose footprint exceeds it
-# fall back to the XLA probe path (per-bucket list_pad specialization is the
-# ROADMAP next step)
+# materializes per multi-term dispatch, checked against the PER-BUCKET
+# specialized list_pad (PR 3); buckets whose footprint still exceeds it
+# fall back to the XLA probe path
 MAX_MULTI_KERNEL_BYTES = 256 << 20
 
 
@@ -54,16 +54,20 @@ def route_classes(prefix_len):
 class QACFrontend:
     """Batched QAC completion with host-side class routing.
 
-    One instance owns a jit cache keyed by (engine, bucket, k); reuse it
-    across requests so steady-state traffic never recompiles. ``trips`` is
-    the single-term pop budget (default k + 2); lanes that exhaust it fall
-    back to the exact 2k-trip engine for the whole sub-batch.
+    One instance owns a jit cache keyed by (engine, bucket, k, list_pad);
+    reuse it across requests so steady-state traffic never recompiles (the
+    per-bucket ``list_pad`` adds at most log2(longest-list) variants per
+    bucket). ``trips`` is the single-term pop budget (default k + 2); lanes
+    that exhaust it fall back to the exact 2k-trip engine for the whole
+    sub-batch. ``heap_kernel`` overrides the single-term engine's automatic
+    VMEM-fit routing to the fused heap_topk kernel (None = auto).
     """
 
     def __init__(self, qidx: QACIndex, *, k: int = 10, tile: int = 128,
                  max_tiles: int = 4096, min_bucket: int = 8,
                  trips: int | None = None, use_kernel: bool | None = None,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 heap_kernel: bool | None = None):
         self.qidx = qidx
         self.k = k
         self.tile = tile
@@ -73,45 +77,66 @@ class QACFrontend:
         self.use_kernel = (default_use_kernel() if use_kernel is None
                            else use_kernel)
         self.interpret = interpret
+        self.heap_kernel = heap_kernel    # None = static VMEM-fit auto-route
         # host-verified probe-list bound for the intersect kernel: the
         # longest posting list in the index, padded to a power of two. Only
         # the frontend can make this check (it routes on the host), which is
         # why the jit-only fused/striped paths keep the XLA probe path.
+        # ``list_pad`` is the global worst case; each multi-term dispatch
+        # re-derives the bound from the lists its sub-batch actually probes
+        # (per-bucket specialization, see ``_multi_list_pad``).
         offs = np.asarray(qidx.index.offsets)
-        max_list = int(np.max(np.diff(offs))) if offs.size > 1 else 1
+        self._list_lens = (np.diff(offs) if offs.size > 1
+                           else np.zeros(1, np.int64))
+        max_list = int(self._list_lens.max()) if offs.size > 1 else 1
         self.list_pad = 1 << max(1, (max_list - 1).bit_length())
-        self.multi_kernel = self.use_kernel and self.list_pad <= MAX_LIST_PAD
         self._cache = {}
         self.stats = {"requests": 0, "single_queries": 0, "multi_queries": 0,
                       "single_fallbacks": 0}
+
+    def _multi_list_pad(self, pids, plen) -> int:
+        """pow2 pad of the longest probe list THIS sub-batch can touch.
+
+        The global ``self.list_pad`` covers the longest list in the whole
+        index; most sub-batches only reference far shorter lists, so the
+        [B, PMAX, list_pad] probe-list gather (and the kernel's VMEM block)
+        shrinks accordingly. Capped at the global bound by construction.
+        """
+        valid = np.arange(pids.shape[1])[None, :] < plen[:, None]
+        terms = np.clip(pids[valid], 0, len(self._list_lens) - 1)
+        max_list = int(self._list_lens[terms].max()) if terms.size else 1
+        return 1 << max(1, (max(max_list, 1) - 1).bit_length())
 
     # -- jit cache ------------------------------------------------------------
     def _bucket(self, n: int) -> int:
         return max(self.min_bucket, 1 << (n - 1).bit_length())
 
-    def _get(self, engine: str, bucket: int, k: int):
-        key = (engine, bucket, k)
+    def _get(self, engine: str, bucket: int, k: int, list_pad: int = 0):
+        key = (engine, bucket, k, list_pad)
         fn = self._cache.get(key)
         if fn is None:
             if engine == "single":
                 def _single(suf, slen):
                     out, done = serve_single_term(
                         self.qidx, suf, slen, k=k, trips=self.trips,
-                        use_kernel=self.use_kernel, interpret=self.interpret)
+                        use_kernel=self.use_kernel, interpret=self.interpret,
+                        heap_kernel=self.heap_kernel)
                     return out, jnp.all(done)   # scalar: one tiny host sync
 
                 fn = jax.jit(_single)
             elif engine == "single_full":
                 fn = jax.jit(lambda suf, slen: serve_single_term_full(
                     self.qidx, suf, slen, k=k, use_kernel=self.use_kernel,
-                    interpret=self.interpret))
+                    interpret=self.interpret, heap_kernel=self.heap_kernel))
             elif engine == "multi":
-                use_k = (self.multi_kernel and bucket * MAX_TERMS
-                         * self.list_pad * 4 <= MAX_MULTI_KERNEL_BYTES)
+                use_k = (self.use_kernel and list_pad <= MAX_LIST_PAD
+                         and bucket * MAX_TERMS * list_pad * 4
+                         <= MAX_MULTI_KERNEL_BYTES)
                 fn = jax.jit(lambda pids, plen, suf, slen: serve_multi_term(
                     self.qidx, pids, plen, suf, slen, k=k, tile=self.tile,
                     max_tiles=self.max_tiles, use_kernel=use_k,
-                    interpret=self.interpret, list_pad=self.list_pad))
+                    interpret=self.interpret, list_pad=list_pad,
+                    probe_iters=list_pad.bit_length()))
             else:
                 raise ValueError(engine)
             self._cache[key] = fn
@@ -144,13 +169,16 @@ class QACFrontend:
         self.stats["single_queries"] += int(single_rows.size)
         self.stats["multi_queries"] += int(multi_rows.size)
 
-        # class-pure batch already at a bucket size: dispatch inputs as-is
-        # (no host round-trip, no padding copies — the common production case
-        # of a class-batched upstream queue)
+        # class-pure batch already at a bucket size: dispatch inputs as-is,
+        # no padding copies (the common production case of a class-batched
+        # upstream queue). The multi path still reads prefix_ids on the host
+        # for the per-bucket list_pad — free when the caller passes
+        # parse_queries' numpy output, a device sync otherwise
         if single_rows.size == B and self._bucket(B) == B:
             return self._run_single(B, k, suffix_chars, suffix_len)
         if multi_rows.size == B and self._bucket(B) == B:
-            return np.asarray(self._get("multi", B, k)(
+            lp = self._multi_list_pad(np.asarray(prefix_ids), plen)
+            return np.asarray(self._get("multi", B, k, lp)(
                 prefix_ids, plen, suffix_chars, suffix_len))
 
         pids = np.asarray(prefix_ids)
@@ -165,7 +193,8 @@ class QACFrontend:
 
         if multi_rows.size:
             pad = np.resize(multi_rows, self._bucket(multi_rows.size))
-            res = self._get("multi", len(pad), k)(
+            lp = self._multi_list_pad(pids[pad], plen[pad])
+            res = self._get("multi", len(pad), k, lp)(
                 pids[pad], plen[pad], suf[pad], slen[pad])
             out[multi_rows] = np.asarray(res)[: multi_rows.size]
 

@@ -37,7 +37,8 @@ from ..distributed.sharding import get_mesh
 def qac_serve_step(qidx: QACIndex, prefix_ids, prefix_len, suffix_chars,
                    suffix_len, *, k: int = 10, tile: int = 128,
                    max_tiles: int = 4096, use_kernel: bool | None = None,
-                   interpret: bool | None = None):
+                   interpret: bool | None = None,
+                   heap_kernel: bool | None = None):
     """Fused single-index batched serve: -> docids int32[B, k] (INF padded).
 
     Every lane pays for BOTH engines (branchless select). This is the
@@ -51,7 +52,7 @@ def qac_serve_step(qidx: QACIndex, prefix_ids, prefix_len, suffix_chars,
         qidx.index, qidx.completions, qidx.rmq_minimal,
         prefix_ids, prefix_len, term_lo, term_hi, k,
         tile=tile, max_tiles=max_tiles, use_kernel=use_kernel,
-        interpret=interpret)
+        interpret=interpret, heap_kernel=heap_kernel)
 
 
 def qac_serve_step_vmap(qidx: QACIndex, prefix_ids, prefix_len, suffix_chars,
@@ -72,7 +73,8 @@ def qac_serve_step_vmap(qidx: QACIndex, prefix_ids, prefix_len, suffix_chars,
 def serve_single_term(qidx: QACIndex, suffix_chars, suffix_len, *, k: int = 10,
                       trips: int | None = None,
                       use_kernel: bool | None = None,
-                      interpret: bool | None = None):
+                      interpret: bool | None = None,
+                      heap_kernel: bool | None = None):
     """Batched single-term serve (paper §3.3) -> (docids int32[B, k], done).
 
     For a batch known to be 100% single-term (empty prefix). ``trips`` bounds
@@ -86,7 +88,8 @@ def serve_single_term(qidx: QACIndex, suffix_chars, suffix_len, *, k: int = 10,
     return single_term_topk_bounded_batch(qidx.index, qidx.rmq_minimal,
                                           term_lo, term_hi, k, trips,
                                           use_kernel=use_kernel,
-                                          interpret=interpret)
+                                          interpret=interpret,
+                                          heap_kernel=heap_kernel)
 
 
 def serve_single_term_vmap(qidx: QACIndex, suffix_chars, suffix_len, *,
@@ -104,31 +107,37 @@ def serve_single_term_vmap(qidx: QACIndex, suffix_chars, suffix_len, *,
 
 def serve_single_term_full(qidx: QACIndex, suffix_chars, suffix_len, *,
                            k: int = 10, use_kernel: bool | None = None,
-                           interpret: bool | None = None):
+                           interpret: bool | None = None,
+                           heap_kernel: bool | None = None):
     """Batched single-term serve, full 2k-trip budget (always exact)."""
     use_kernel = default_use_kernel() if use_kernel is None else use_kernel
     term_lo, term_hi = qidx.dictionary.locate_prefix(suffix_chars, suffix_len)
     return single_term_topk_batch(qidx.index, qidx.rmq_minimal, term_lo,
                                   term_hi, k, use_kernel=use_kernel,
-                                  interpret=interpret)
+                                  interpret=interpret,
+                                  heap_kernel=heap_kernel)
 
 
 def serve_multi_term(qidx: QACIndex, prefix_ids, prefix_len, suffix_chars,
                      suffix_len, *, k: int = 10, tile: int = 128,
                      max_tiles: int = 4096, use_kernel: bool = False,
-                     interpret: bool | None = None, list_pad: int = 8192):
+                     interpret: bool | None = None, list_pad: int = 8192,
+                     probe_iters: int = 0):
     """Batched conjunctive serve (Fig 5 Fwd) for a 100%-multi-term batch.
 
     ``use_kernel`` here defaults to False (not platform-resolved): the
     intersect kernel holds probe lists in VMEM and is only correct when
     every needed list fits in ``list_pad``, a bound the caller must verify
-    on the host (``serve.frontend.QACFrontend`` does).
+    on the host (``serve.frontend.QACFrontend`` does — and, having
+    verified it, also passes the matching ``probe_iters`` binary-search
+    depth for the XLA probe path).
     """
     term_lo, term_hi = qidx.dictionary.locate_prefix(suffix_chars, suffix_len)
     return conjunctive_multi_batch(qidx.index, qidx.completions, prefix_ids,
                                    prefix_len, term_lo, term_hi, k, tile=tile,
                                    max_tiles=max_tiles, use_kernel=use_kernel,
-                                   interpret=interpret, list_pad=list_pad)
+                                   interpret=interpret, list_pad=list_pad,
+                                   probe_iters=probe_iters)
 
 
 def serve_multi_term_vmap(qidx: QACIndex, prefix_ids, prefix_len,
@@ -146,7 +155,8 @@ def serve_multi_term_vmap(qidx: QACIndex, prefix_ids, prefix_len,
 
 def _local_serve(striped: StripedQACIndex, prefix_ids, prefix_len,
                  term_lo, term_hi, k: int, tile: int, max_tiles: int,
-                 use_kernel: bool = False, interpret: bool | None = None):
+                 use_kernel: bool = False, interpret: bool | None = None,
+                 heap_kernel: bool | None = None):
     """Runs on one stripe (inside shard_map): [B_loc, k] local top-k.
 
     Batch-native fused engines; ``use_kernel`` routes the per-pop RMQ
@@ -158,14 +168,16 @@ def _local_serve(striped: StripedQACIndex, prefix_ids, prefix_len,
                                       prefix_len, term_lo, term_hi, k,
                                       tile=tile, max_tiles=max_tiles,
                                       use_kernel=use_kernel,
-                                      interpret=interpret)
+                                      interpret=interpret,
+                                      heap_kernel=heap_kernel)
 
 
 def qac_serve_striped(striped: StripedQACIndex, dictionary, prefix_ids,
                       prefix_len, suffix_chars, suffix_len, *, k: int = 10,
                       tile: int = 128, max_tiles: int = 4096, mesh=None,
                       merge: str = "gather", use_kernel: bool | None = None,
-                      interpret: bool | None = None):
+                      interpret: bool | None = None,
+                      heap_kernel: bool | None = None):
     """Distributed serve over the (pod?, data, model) mesh.
 
     Returns global top-k docids int32[B, k]. Without a mesh, runs a loop over
@@ -188,7 +200,7 @@ def qac_serve_striped(striped: StripedQACIndex, dictionary, prefix_ids,
             sub = jax.tree_util.tree_map(lambda a: a[s : s + 1], striped)
             parts.append(_local_serve(sub, prefix_ids, prefix_len,
                                       term_lo, term_hi, k, tile, max_tiles,
-                                      use_kernel, interpret))
+                                      use_kernel, interpret, heap_kernel))
         allk = jnp.concatenate(parts, axis=1)              # [B, S*k]
         return lax.top_k(-allk, k)[0] * -1
 
@@ -197,7 +209,7 @@ def qac_serve_striped(striped: StripedQACIndex, dictionary, prefix_ids,
 
     def local_fn(st, pids, plen, tl, th):
         local = _local_serve(st, pids, plen, tl, th, k, tile, max_tiles,
-                             use_kernel, interpret)
+                             use_kernel, interpret, heap_kernel)
         if merge == "butterfly":
             nsh = mesh.shape["model"]
             cur = local

@@ -1,0 +1,164 @@
+"""On-chip single-term top-k kernel vs the vmap per-query reference (ISSUE 3).
+
+The heap_topk kernel runs the WHOLE bounded-trip single-term engine in one
+Pallas launch (heap state in VMEM scratch, in-kernel RMQ + iterator
+gathers). Both the kernel (interpret mode off-TPU) and the ref.py XLA
+fallback must be bit-identical — ``out`` AND ``done`` — to vmap-ing
+``single_term_topk_bounded``, across empty/inverted term ranges,
+duplicate-docid trip starvation, and every trip budget.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from _hyp import given, settings, st
+
+from repro.core import build_qac_index, parse_queries, INF_DOCID
+from repro.core.search import (single_term_topk_bounded,
+                               single_term_topk_bounded_batch)
+from repro.kernels.heap_topk.ops import heap_topk
+from repro.kernels.heap_topk.ref import heap_topk_ref
+from repro.text import SynthLogConfig, generate_query_log
+
+
+@pytest.fixture(scope="module")
+def built():
+    # small vocab => heavy term co-occurrence => duplicate docids across the
+    # lists of a suffix range (the dedup/trip-starvation stressor)
+    qs, sc = generate_query_log(SynthLogConfig(n_queries=500, vocab_size=80,
+                                               mean_term_chars=4.0, seed=9))
+    qidx, kept, _ = build_qac_index(qs, sc)
+    return qidx, kept
+
+
+def _ranges(qidx, kept, rng, B, pct_garbage=25):
+    """Term ranges of B random partial tokens + garbage (empty-range) lanes."""
+    out = []
+    for _ in range(B):
+        if rng.integers(0, 100) < pct_garbage:
+            out.append("zzzzzzqx")
+        else:
+            t = kept[rng.integers(0, len(kept))].split()[0]
+            out.append(t[: rng.integers(1, len(t) + 1)])
+    _, _, _, suf, slen = parse_queries(qidx.dictionary, out)
+    tl, th = qidx.dictionary.locate_prefix(suf, slen)
+    return jnp.asarray(tl), jnp.asarray(th)
+
+
+def _want(qidx, tl, th, k, trips):
+    return jax.vmap(lambda a, b: single_term_topk_bounded(
+        qidx.index, qidx.rmq_minimal, a, b, k, trips))(tl, th)
+
+
+def _got(qidx, tl, th, k, trips, **kw):
+    """ops.heap_topk + the caller-side bad/full-budget done conditions
+    (exactly what ``single_term_topk_bounded_batch`` layers on top)."""
+    rm, idx = qidx.rmq_minimal, qidx.index
+    t = min(trips, 2 * k)
+    out, done = heap_topk(rm.values, rm.st_pos, rm.ib, idx.offsets,
+                          idx.postings, tl, th, k=k, trips=t, n=rm.n,
+                          n_terms=idx.n_terms, **kw)
+    bad = np.asarray(tl) >= np.asarray(th)
+    out = np.where(bad[:, None], INF_DOCID, np.asarray(out))
+    done = np.asarray(done) | bad | (t >= 2 * k)
+    return out, done
+
+
+@pytest.mark.parametrize("trips", [1, 3, 12, 20])
+def test_ref_matches_vmap(built, trips):
+    """Starvation budgets included: duplicate runs burn pops, so small
+    ``trips`` must reproduce the partial out AND the done flags."""
+    qidx, kept = built
+    tl, th = _ranges(qidx, kept, np.random.default_rng(trips), 48)
+    wo, wd = _want(qidx, tl, th, 10, trips)
+    go, gd = _got(qidx, tl, th, 10, trips, use_kernel=False)
+    np.testing.assert_array_equal(go, np.asarray(wo))
+    np.testing.assert_array_equal(gd, np.asarray(wd))
+    if trips == 1:
+        assert not gd.all(), "starvation budget should trip lanes"
+
+
+@pytest.mark.parametrize("trips,k", [(1, 10), (3, 10), (12, 10), (20, 10),
+                                     (7, 5)])
+def test_kernel_matches_vmap(built, trips, k):
+    qidx, kept = built
+    tl, th = _ranges(qidx, kept, np.random.default_rng(100 + trips), 48)
+    wo, wd = _want(qidx, tl, th, k, trips)
+    go, gd = _got(qidx, tl, th, k, trips, use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(go, np.asarray(wo))
+    np.testing.assert_array_equal(gd, np.asarray(wd))
+
+
+def test_kernel_lane_padding(built):
+    """B not a multiple of the kernel's lane tile: pad lanes are dead."""
+    qidx, kept = built
+    for B in (5, 130):
+        tl, th = _ranges(qidx, kept, np.random.default_rng(B), B)
+        wo, wd = _want(qidx, tl, th, 10, 12)
+        go, gd = _got(qidx, tl, th, 10, 12, use_kernel=True, interpret=True)
+        np.testing.assert_array_equal(go, np.asarray(wo))
+        np.testing.assert_array_equal(gd, np.asarray(wd))
+
+
+def test_all_inverted_ranges(built):
+    """Every lane empty/inverted: INF rows, done immediately."""
+    qidx, _ = built
+    B = 16
+    tl = jnp.asarray(np.arange(B, dtype=np.int32) + 5)
+    th = jnp.asarray(np.arange(B, dtype=np.int32))       # th < tl everywhere
+    for kw in (dict(use_kernel=False),
+               dict(use_kernel=True, interpret=True)):
+        go, gd = _got(qidx, tl, th, 10, 12, **kw)
+        assert (go == INF_DOCID).all()
+        assert gd.all()
+
+
+def test_engine_heap_kernel_route(built):
+    """single_term_topk_bounded_batch(heap_kernel=True) == the default
+    XLA route — the kernel-routing seam used on TPU, under interpret."""
+    qidx, kept = built
+    tl, th = _ranges(qidx, kept, np.random.default_rng(77), 32)
+    wo, wd = single_term_topk_bounded_batch(qidx.index, qidx.rmq_minimal,
+                                            tl, th, 10, 12)
+    go, gd = single_term_topk_bounded_batch(qidx.index, qidx.rmq_minimal,
+                                            tl, th, 10, 12, use_kernel=True,
+                                            heap_kernel=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(go), np.asarray(wo))
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+
+
+def test_engine_per_pop_route(built):
+    """heap_kernel=False forces the per-pop batched-RMQ kernel route (what
+    a VMEM-oversized corpus takes on TPU) — still bit-identical."""
+    qidx, kept = built
+    tl, th = _ranges(qidx, kept, np.random.default_rng(78), 32)
+    wo, wd = single_term_topk_bounded_batch(qidx.index, qidx.rmq_minimal,
+                                            tl, th, 10, 12)
+    go, gd = single_term_topk_bounded_batch(qidx.index, qidx.rmq_minimal,
+                                            tl, th, 10, 12, use_kernel=True,
+                                            heap_kernel=False, interpret=True)
+    np.testing.assert_array_equal(np.asarray(go), np.asarray(wo))
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+
+
+@given(st.integers(0, 2**31 - 2), st.sampled_from([1, 4, 9, 12, 17, 20]))
+@settings(max_examples=15, deadline=None)
+def test_heap_topk_property(built, seed, trips):
+    """Random term ranges (valid, empty, inverted, out-of-bounds) x random
+    trip budgets: ref AND Pallas kernel bit-identical to the vmap
+    reference (sampled trip values keep the interpret-mode compile count
+    bounded)."""
+    qidx, _ = built
+    V = qidx.index.n_terms
+    rng = np.random.default_rng(seed % 2**32)
+    B = 16
+    tl = jnp.asarray(rng.integers(-2, V + 3, B).astype(np.int32))
+    th = jnp.asarray((np.asarray(tl)
+                      + rng.integers(-4, V, B)).astype(np.int32))
+    wo, wd = _want(qidx, tl, th, 10, trips)
+    go, gd = _got(qidx, tl, th, 10, trips, use_kernel=False)
+    np.testing.assert_array_equal(go, np.asarray(wo))
+    np.testing.assert_array_equal(gd, np.asarray(wd))
+    ko, kd = _got(qidx, tl, th, 10, trips, use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(ko, np.asarray(wo))
+    np.testing.assert_array_equal(kd, np.asarray(wd))
