@@ -16,6 +16,11 @@ PRs), the ``qac_single_engine_kernel_b{B}`` keys tracking the heap_topk
 route (the fused on-chip kernel on TPU; its one-dispatch XLA reference
 off-TPU), and the fused-path acceptance gate: the batched fused engine
 must be at least at parity with the vmap-of-scalar fused engine.
+ISSUE 4 adds the online-serving sweep: a keystroke-session trace replayed
+through the micro-batching runtime (serve/runtime.py), emitting the
+``qac_online_p50/p95/p99/mean_us`` + ``qac_online_cache_hit_rate`` keys —
+END-TO-END per-request latency under arrival dynamics — gated on parity
+with naive per-request dispatch, >=30% hit rate, and >=2x mean speedup.
 """
 from __future__ import annotations
 
@@ -156,6 +161,54 @@ def main():
     assert t_b <= t_v * 1.10, \
         (f"fused-path regression: batched {t_b/B*1e6:.1f} us/q slower than "
          f"vmap {t_v/B*1e6:.1f} us/q at B={B}")
+
+    # -- online serving runtime: keystroke-session trace (ISSUE 4 tentpole) --
+    # End-to-end latency under arrival dynamics, not amortized us/q: replay a
+    # keystroke-per-session trace through the deadline-aware micro-batching
+    # runtime + prefix/session caches, vs naive one-request-per-dispatch
+    # serving (== uncached per-request QACFrontend calls, which doubles as
+    # the bit-identity reference). Acceptance: parity everywhere, cache hit
+    # rate >= 30%, mean per-request latency >= 2x better than naive.
+    from repro.serve.runtime import (QACOnlineRuntime, RuntimeConfig,
+                                     prepare_requests, run_naive_trace)
+    from repro.text import KeystrokeTraceConfig, generate_keystroke_trace
+
+    n_sessions = 64 if QUICK else 128
+    trace = generate_keystroke_trace(kept, KeystrokeTraceConfig(
+        n_sessions=n_sessions, queries_per_session=1 if QUICK else 2,
+        seed=31))
+    reqs = prepare_requests(qidx, trace, k=10)
+    # slack sized to the host-CPU engine (~ms service): big enough to form
+    # real micro-batches, small enough that a miss's deadline wait doesn't
+    # dwarf the per-dispatch cost it amortizes
+    rt = QACOnlineRuntime(
+        QACFrontend(qidx, k=10, specialize_list_pad=False),
+        RuntimeConfig(max_batch=64, slack_us=5_000.0))
+    online_rows = rt.replay(reqs)
+    snap = rt.telemetry.snapshot()
+    # same (warm) frontend: complete() is pure — identical reference rows,
+    # no duplicate compiles; run_naive_trace's own warm loop still covers
+    # the B=1 shapes before any timing
+    naive_rows, naive = run_naive_trace(rt.fe, reqs)
+    for i, (g, w) in enumerate(zip(online_rows, naive_rows)):
+        assert np.array_equal(g, w), \
+            f"online runtime parity break at request {i} ({reqs[i].query!r})"
+    assert snap["cache_hit_rate"] >= 0.30, \
+        f"cache hit rate {snap['cache_hit_rate']:.2f} below the 30% floor"
+    assert naive["mean_us"] >= 2 * snap["mean_us"], \
+        (f"micro-batched mean {snap['mean_us']:.0f}us not 2x better than "
+         f"naive {naive['mean_us']:.0f}us")
+    emit("qac_online_p50_us", snap["p50_us"],
+         f"sessions={n_sessions},n={snap['n_requests']}")
+    emit("qac_online_p95_us", snap["p95_us"],
+         f"batches={snap['n_batches']},mean_batch={snap['mean_batch_size']:.1f}")
+    emit("qac_online_p99_us", snap["p99_us"],
+         f"queue_peak={snap['queue_peak']}")
+    emit("qac_online_mean_us", snap["mean_us"],
+         f"naive_mean_us={naive['mean_us']:.1f},"
+         f"speedup={naive['mean_us']/max(snap['mean_us'], 1e-9):.2f}x")
+    emit("qac_online_cache_hit_rate", snap["cache_hit_rate"],
+         ",".join(f"{p}={c}" for p, c in sorted(snap["paths"].items())))
 
     # -- striped distributed path (agreement check) --------------------------
     striped = build_striped(rows, d_of_row, qidx.dictionary.n_terms, 4)

@@ -62,12 +62,17 @@ def emit(name: str, us_per_call: float, derived: str = ""):
 
 
 def write_bench_json(path: str | None = None) -> str:
-    """Dump all emitted results as {name: us_per_call} JSON at the repo root.
+    """Merge all emitted results as {name: value} JSON at the repo root.
 
     The bench trajectory (BENCH_qac.json) is the machine-readable record the
     perf gate and future PRs diff against; every ``benchmarks.run`` /
-    ``bench_qac_serve`` invocation refreshes its own entries and keeps the
-    rest (so ``--only`` runs don't clobber the other modules' numbers).
+    ``bench_qac_serve`` invocation MERGES its own entries over the existing
+    file and keeps the rest (so ``--only`` runs don't clobber the other
+    modules' numbers — including the online runtime's ``qac_online_*``
+    latency/hit-rate keys, which capture end-to-end serving rather than
+    per-engine us/q). The write goes through a tmp file + ``os.replace`` so
+    a crash mid-dump can't leave a torn JSON behind for the next merge to
+    silently discard.
     """
     import json
 
@@ -82,8 +87,10 @@ def write_bench_json(path: str | None = None) -> str:
         except (ValueError, OSError):
             merged = {}
     merged.update(RESULTS)
-    with open(path, "w") as f:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
         json.dump(merged, f, indent=2, sort_keys=True)
         f.write("\n")
+    os.replace(tmp, path)
     print(f"# bench json: {path}", flush=True)
     return path

@@ -3,11 +3,16 @@
 #   1. kernel parity fast-fail: the heap_topk + batched-engine suites first
 #      (bit-identity of every kernel route vs the vmap references) so a
 #      broken kernel fails in ~2 min instead of after the whole tier-1 run;
-#   2. tier-1 test suite (must collect all modules — zero ImportErrors);
-#   3. quick-mode serving benchmark (exercises the batch-native engines, the
+#   2. online-runtime smoke: a short keystroke trace through
+#      `launch/serve.py --online --check` (micro-batch scheduler + prefix/
+#      session caches), asserting parity with naive per-request dispatch
+#      and a nonzero cache hit rate;
+#   3. tier-1 test suite (must collect all modules — zero ImportErrors);
+#   4. quick-mode serving benchmark (exercises the batch-native engines, the
 #      heap_topk route B-sweep, the routed frontend, the fused fallback +
-#      its >=parity-vs-vmap acceptance assert, and the striped path
-#      end-to-end; writes the BENCH_qac.json snapshot).
+#      its >=parity-vs-vmap acceptance assert, the online-runtime trace
+#      sweep with its >=30% hit-rate / >=2x-vs-naive gates, and the striped
+#      path end-to-end; writes the BENCH_qac.json snapshot).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -15,6 +20,13 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== kernel parity: heap_topk + batched engines =="
 python -m pytest -x -q tests/test_heap_topk.py tests/test_batched_engines.py
+
+echo "== online-runtime smoke: scheduler + prefix-cache parity =="
+# short keystroke trace through the micro-batching runtime; --check asserts
+# bit-identity vs naive one-request-per-dispatch serving and a nonzero
+# cache hit rate (fails fast here instead of after the whole tier-1 run)
+python -m repro.launch.serve --online --check --queries 3000 --sessions 64 \
+    --slack-us 5000
 
 echo "== tier-1: pytest =="
 python -m pytest -x -q --ignore=tests/test_heap_topk.py \

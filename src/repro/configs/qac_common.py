@@ -43,8 +43,27 @@ class QACArch:
     # exceed the budget, so its stripes take the per-pop batched-RMQ route;
     # smaller cells may force the fused kernel with True)
     heap_kernel: bool | None = None
+    # online serving runtime (serve/runtime.py): micro-batch formation +
+    # the keystroke-locality caches. slack_us is the batching deadline per
+    # request (arrival + slack), a budget spent buying batch occupancy —
+    # NOT the end-to-end SLA, which also pays queueing + engine service.
+    online_max_batch: int = 256
+    online_slack_us: float = 20_000.0
+    online_cache_entries: int = 1 << 17
+    online_session_entries: int = 1 << 17
 
     family = "qac"
+
+    def runtime_config(self):
+        """The arch's online-runtime knobs as a ``RuntimeConfig``."""
+        from ..serve.runtime import RuntimeConfig
+
+        return RuntimeConfig(
+            max_batch=self.online_max_batch,
+            slack_us=self.online_slack_us,
+            cache_entries=self.online_cache_entries,
+            session_entries=self.online_session_entries,
+        )
 
     def cells(self):
         return [Cell(self.arch_id, s, spec["kind"])

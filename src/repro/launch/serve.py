@@ -3,6 +3,15 @@ batched completions — the paper's system end-to-end.
 
   PYTHONPATH=src python -m repro.launch.serve --queries 20000 --batch 256 \
       [--stripes 4] [--routed] [--interactive "bmw i3 s"]
+
+Online mode (ISSUE 4) replays a keystroke-per-session trace through the
+deadline-aware micro-batching runtime + prefix/session caches and prints
+latency telemetry; ``--check`` additionally asserts bit-identical parity
+against naive one-request-per-dispatch serving and a nonzero hit rate
+(the CI smoke in scripts/check_seed.sh):
+
+  PYTHONPATH=src python -m repro.launch.serve --online --queries 3000 \
+      --sessions 64 [--check] [--slack-us 20000] [--max-batch 64]
 """
 from __future__ import annotations
 
@@ -13,13 +22,59 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.text import SynthLogConfig, generate_query_log
+from repro.text import (SynthLogConfig, generate_query_log,
+                        KeystrokeTraceConfig, generate_keystroke_trace)
 from repro.core import build_qac_index, parse_queries, corpus_stats, INF_DOCID
 from repro.core.builder import build_corpus
 from repro.core.striped import build_striped
 from repro.serve.qac import qac_serve_step, qac_serve_striped
 from repro.serve.frontend import QACFrontend
+from repro.serve.runtime import (QACOnlineRuntime,
+                                 prepare_requests, run_naive_trace)
+from repro.configs.qac_common import QACArch
 from repro.core.strings import decode_string
+
+
+def run_online(args, qidx, kept) -> None:
+    trace = generate_keystroke_trace(kept, KeystrokeTraceConfig(
+        n_sessions=args.sessions, mean_keystroke_ms=args.keystroke_ms,
+        seed=0))
+    reqs = prepare_requests(qidx, trace, k=args.k)
+    print(f"[serve] online trace: {len(reqs)} keystroke requests over "
+          f"{args.sessions} concurrent sessions")
+    # the arch config carries the runtime knobs (QACArch.online_*); CLI
+    # flags override the scheduler pair for experiments
+    cfg = QACArch(k=args.k).runtime_config()
+    if args.max_batch is not None:
+        cfg.max_batch = args.max_batch
+    if args.slack_us is not None:
+        cfg.slack_us = args.slack_us
+    # closed jit-variant space for online traffic: global list_pad, no
+    # per-bucket specialization (see QACFrontend.specialize_list_pad)
+    frontend = QACFrontend(qidx, k=args.k, specialize_list_pad=False)
+    rt = QACOnlineRuntime(frontend, cfg)
+    results = rt.replay(reqs)
+    s = rt.telemetry.snapshot()
+    print(f"[serve] online: p50={s['p50_us']:.0f}us p95={s['p95_us']:.0f}us "
+          f"p99={s['p99_us']:.0f}us mean={s['mean_us']:.0f}us "
+          f"hit_rate={s['cache_hit_rate']:.2f} paths={s['paths']}")
+    print(f"[serve] online: {s['n_batches']} batches "
+          f"(mean size {s['mean_batch_size']:.1f}, hist {s['batch_hist']}), "
+          f"triggers={s['triggers']}, queue_peak={s['queue_peak']}, "
+          f"engine_wall={s['engine_wall_us']/1e3:.1f}ms")
+    if args.check:
+        # same (warm) frontend: complete() is pure, so the reference is
+        # identical and the B=1 jit variants aren't compiled twice
+        naive_rows, naive = run_naive_trace(frontend, reqs)
+        for i, (g, w) in enumerate(zip(results, naive_rows)):
+            assert np.array_equal(g, w), (
+                f"online-runtime parity break at request {i} "
+                f"({reqs[i].query!r}): {g} != {w}")
+        assert s["cache_hit_rate"] > 0, "expected a nonzero cache hit rate"
+        print(f"[serve] online check OK: {len(reqs)} requests bit-identical "
+              f"to one-request-per-dispatch serving "
+              f"(naive mean={naive['mean_us']:.0f}us, "
+              f"speedup={naive['mean_us']/max(s['mean_us'], 1e-9):.2f}x)")
 
 
 def main():
@@ -34,6 +89,22 @@ def main():
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--interactive", default=None,
                     help="serve one literal partial query and print strings")
+    ap.add_argument("--online", action="store_true",
+                    help="replay a keystroke-session trace through the "
+                         "micro-batching runtime (serve/runtime.py) and "
+                         "print latency telemetry")
+    ap.add_argument("--sessions", type=int, default=64,
+                    help="concurrent keystroke sessions in --online mode")
+    ap.add_argument("--keystroke-ms", type=float, default=150.0)
+    ap.add_argument("--slack-us", type=float, default=None,
+                    help="micro-batch deadline slack per request "
+                         "(default: QACArch.online_slack_us)")
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="micro-batch size cap "
+                         "(default: QACArch.online_max_batch)")
+    ap.add_argument("--check", action="store_true",
+                    help="--online only: assert bit-identical parity vs "
+                         "naive per-request dispatch + nonzero hit rate")
     args = ap.parse_args()
 
     print(f"[serve] generating {args.queries} synthetic scored queries ...")
@@ -44,6 +115,10 @@ def main():
     print(f"[serve] built index in {time.time()-t0:.1f}s: "
           f"{stats.n_queries} completions, {stats.n_unique_terms} terms, "
           f"{stats.avg_terms_per_query:.2f} terms/query")
+
+    if args.online:
+        run_online(args, qidx, kept)
+        return
 
     if args.interactive:
         pids, plen, pok, suf, slen = parse_queries(qidx.dictionary,

@@ -9,4 +9,11 @@ from .qac import (  # noqa: F401
     serve_multi_term_vmap,
 )
 from .frontend import QACFrontend, route_classes  # noqa: F401
+from .runtime import (  # noqa: F401
+    QACOnlineRuntime,
+    RuntimeConfig,
+    QACRequest,
+    prepare_requests,
+    run_naive_trace,
+)
 from .lm import prefill_step, make_decode_step  # noqa: F401

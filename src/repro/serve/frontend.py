@@ -67,13 +67,22 @@ class QACFrontend:
                  max_tiles: int = 4096, min_bucket: int = 8,
                  trips: int | None = None, use_kernel: bool | None = None,
                  interpret: bool | None = None,
-                 heap_kernel: bool | None = None):
+                 heap_kernel: bool | None = None,
+                 specialize_list_pad: bool = True):
         self.qidx = qidx
         self.k = k
         self.tile = tile
         self.max_tiles = max_tiles
         self.min_bucket = min_bucket
         self.trips = trips
+        # per-bucket list_pad specialization (PR 3) mints one jit variant per
+        # pow2 of the longest list a sub-batch probes — the right trade for
+        # big offline batches, but ONLINE micro-batches are small and varied,
+        # so the variant space stays open and every new pow2 is a compile
+        # stall on the serving path. serve/runtime.py constructs frontends
+        # with False: every multi-term dispatch uses the global worst-case
+        # pad, closing the jit-variant space so steady state never recompiles
+        self.specialize_list_pad = specialize_list_pad
         self.use_kernel = (default_use_kernel() if use_kernel is None
                            else use_kernel)
         self.interpret = interpret
@@ -102,6 +111,8 @@ class QACFrontend:
         [B, PMAX, list_pad] probe-list gather (and the kernel's VMEM block)
         shrinks accordingly. Capped at the global bound by construction.
         """
+        if not self.specialize_list_pad:
+            return self.list_pad
         valid = np.arange(pids.shape[1])[None, :] < plen[:, None]
         terms = np.clip(pids[valid], 0, len(self._list_lens) - 1)
         max_list = int(self._list_lens[terms].max()) if terms.size else 1
@@ -142,6 +153,19 @@ class QACFrontend:
             self._cache[key] = fn
         return fn
 
+    def _k_bucket(self, ki: int) -> int:
+        """jit-cache k snap (ISSUE 4 satellite). The frontend's default k
+        stays exact — the common case never pays a bigger trip budget — and
+        every other requested k rounds up to a power of two, so the long
+        tail of large-k requests shares a handful of jit variants instead
+        of minting one per distinct k. ``_complete_per_k`` groups rows by
+        this bucket before dispatch, so a k=100 straggler no longer drags
+        the whole batch's single-term trip budget up with it."""
+        ki = int(ki)
+        if ki == self.k:
+            return ki
+        return 1 << max(0, (ki - 1).bit_length())
+
     # -- serving --------------------------------------------------------------
     def _run_single(self, bucket: int, k: int, suf, slen):
         res, all_done = self._get("single", bucket, k)(suf, slen)
@@ -153,15 +177,64 @@ class QACFrontend:
         return np.asarray(res)
 
     def complete(self, prefix_ids, prefix_len, suffix_chars, suffix_len, *,
-                 k: int | None = None):
-        """Routed batched Complete(): -> host docids int32[B, k] (INF padded),
+                 k: int | np.ndarray | None = None):
+        """Routed batched Complete(): -> host docids int32[B, K] (INF padded),
         in the original request order.
+
+        ``k`` may be a scalar (K = k, the classic contract) or a per-request
+        int array (ISSUE 4 satellite): K = max(k), row i holds its exact
+        k[i]-result in columns [0, k[i]) and INF_DOCID beyond — bit-identical
+        to a scalar call at k[i], because the engines' top-k is prefix-stable
+        (the first j results of a k-result are the j-result for j <= k).
+        Rows are grouped by ``_k_bucket`` so tail ks share jit variants and
+        never inflate the default-k trip budget.
 
         Inputs may be device or host arrays. The result lives on the host (the
         scatter-back is a host op and serving consumers read results there);
         wrap in ``jnp.asarray`` if device residency is needed.
         """
         k = self.k if k is None else k
+        karr = np.asarray(k)
+        if karr.ndim:
+            karr = karr.astype(np.int64).reshape(-1)
+            if karr.size == 0:
+                return np.full((0, 0), INF_DOCID, np.int32)
+            # collapse to the scalar path only for the frontend's default k:
+            # a uniform TAIL k must still go through the bucketed path, or
+            # every distinct uniform k would mint its own raw jit variant —
+            # reopening the variant space the buckets exist to close
+            if bool((karr == self.k).all()):
+                return self._complete_scalar(prefix_ids, prefix_len,
+                                             suffix_chars, suffix_len,
+                                             self.k)
+            return self._complete_per_k(prefix_ids, prefix_len, suffix_chars,
+                                        suffix_len, karr)
+        return self._complete_scalar(prefix_ids, prefix_len, suffix_chars,
+                                     suffix_len, int(karr))
+
+    def _complete_per_k(self, prefix_ids, prefix_len, suffix_chars,
+                        suffix_len, karr):
+        """Mixed-k batch: dispatch each pow2 k-bucket's rows separately."""
+        pids = np.asarray(prefix_ids)
+        plen = np.asarray(prefix_len)
+        suf = np.asarray(suffix_chars)
+        slen = np.asarray(suffix_len)
+        B = plen.shape[0]
+        kmax = int(karr.max())
+        out = np.full((B, kmax), INF_DOCID, np.int32)
+        buckets = np.asarray([self._k_bucket(ki) for ki in karr])
+        for kb in np.unique(buckets):
+            idx = np.flatnonzero(buckets == kb)
+            sub = np.asarray(self._complete_scalar(
+                pids[idx], plen[idx], suf[idx], slen[idx], int(kb)))
+            w = min(int(kb), kmax)
+            cols = np.arange(w)
+            out[idx[:, None], cols[None, :]] = np.where(
+                cols[None, :] < karr[idx][:, None], sub[:, :w], INF_DOCID)
+        return out
+
+    def _complete_scalar(self, prefix_ids, prefix_len, suffix_chars,
+                         suffix_len, k: int):
         plen = np.asarray(prefix_len)
         B = plen.shape[0]
         single_rows, multi_rows = route_classes(plen)

@@ -1,1 +1,7 @@
-from .synth import SynthLogConfig, generate_query_log, make_eval_queries  # noqa: F401
+from .synth import (  # noqa: F401
+    SynthLogConfig,
+    generate_query_log,
+    KeystrokeTraceConfig,
+    generate_keystroke_trace,
+    make_eval_queries,
+)

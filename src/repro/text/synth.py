@@ -56,6 +56,64 @@ def generate_query_log(cfg: SynthLogConfig = SynthLogConfig()):
     return queries, scores
 
 
+@dataclasses.dataclass
+class KeystrokeTraceConfig:
+    """Synthetic online QAC traffic: concurrent sessions typing queries
+    keystroke by keystroke (the AmazonQAC-documented shape of real traffic —
+    each request extends the previous prefix by one character, with
+    occasional backspace runs)."""
+
+    n_sessions: int = 64
+    queries_per_session: int = 1
+    mean_keystroke_ms: float = 150.0    # exponential inter-keystroke gap
+    session_spread_ms: float = 2000.0   # session start times ~ U[0, spread)
+    p_backspace: float = 0.06           # per-keystroke chance of a delete run
+    max_backspace: int = 3
+    popularity_zipf_s: float = 1.05     # target-query popularity skew
+    seed: int = 0
+
+
+def generate_keystroke_trace(queries: list[str],
+                             cfg: KeystrokeTraceConfig = KeystrokeTraceConfig()):
+    """-> list[(t_us float, session_id int, partial_query str)], time-sorted.
+
+    Each session draws Zipf-popular target queries from ``queries`` and
+    emits every prefix on its way to typing them (including prefixes ending
+    in a space — a complete term + empty suffix is a valid QAC request).
+    Backspace runs re-emit the shorter prefixes, the backtracking pattern a
+    prefix cache must survive. Inter-arrival gaps are exponential (Poisson
+    keystrokes per session); session starts are staggered so ~all sessions
+    overlap — the concurrent-session count IS ``n_sessions``.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    pool = list(queries)
+    perm = rng.permutation(len(pool))
+    # bounded Zipf over popularity ranks (NOT rng.zipf, whose unbounded tail
+    # would clamp a majority of draws onto the single last rank)
+    probs = 1.0 / np.arange(1, len(pool) + 1) ** cfg.popularity_zipf_s
+    probs /= probs.sum()
+    events = []
+    for s in range(cfg.n_sessions):
+        t = rng.uniform(0.0, cfg.session_spread_ms) * 1e3
+        for _ in range(cfg.queries_per_session):
+            target = pool[perm[rng.choice(len(pool), p=probs)]]
+            n = 1
+            while n <= len(target):
+                t += rng.exponential(cfg.mean_keystroke_ms) * 1e3
+                events.append((t, s, target[:n]))
+                if (1 < n < len(target) and rng.random() < cfg.p_backspace):
+                    for _ in range(int(rng.integers(1, cfg.max_backspace + 1))):
+                        if n <= 1:
+                            break
+                        n -= 1
+                        t += rng.exponential(cfg.mean_keystroke_ms / 2) * 1e3
+                        events.append((t, s, target[:n]))
+                n += 1
+            t += rng.exponential(5 * cfg.mean_keystroke_ms) * 1e3  # dwell
+    events.sort(key=lambda e: (e[0], e[1]))
+    return events
+
+
 def make_eval_queries(kept: list[str], rng: np.random.Generator,
                       n_per_bucket: int, retain_pct: int):
     """Paper §4 methodology: sample completions per term-count bucket, keep

@@ -107,6 +107,53 @@ def test_routed_jit_cache_reuse(built):
     assert len(fe._cache) == n_entries
 
 
+def test_per_request_k_matches_scalar_calls(built):
+    """ISSUE 4 satellite: a per-request k array must give each row exactly
+    its scalar-k result in columns [0, k_i) and INF beyond — the engines'
+    top-k is prefix-stable — while the jit cache only ever sees the pow2
+    k-buckets (plus the exact default k), never the raw tail ks."""
+    qidx, kept = built
+    fe = QACFrontend(qidx, k=10)
+    rng = np.random.default_rng(7)
+    batch = _mixed_batch(kept, rng, 24, 50, pct_garbage=10)
+    pids, plen, pok, suf, slen = parse_queries(qidx.dictionary, batch)
+    karr = rng.choice([3, 10, 21, 64], size=24)
+    karr[:4] = [3, 10, 21, 64]          # every bucket present
+    out = fe.complete(pids, plen, suf, slen, k=karr)
+    assert out.shape == (24, int(karr.max()))
+    # cache keys snapshot BEFORE the scalar reference calls add their own
+    ks_in_cache = {key[2] for key in fe._cache}
+    assert ks_in_cache <= {10, 4, 32, 64}, ks_in_cache
+    pids_n, plen_n = np.asarray(pids), np.asarray(plen)
+    suf_n, slen_n = np.asarray(suf), np.asarray(slen)
+    for i, ki in enumerate(karr):
+        want = np.asarray(fe.complete(pids_n[i:i + 1], plen_n[i:i + 1],
+                                      suf_n[i:i + 1], slen_n[i:i + 1],
+                                      k=int(ki)))[0]
+        np.testing.assert_array_equal(out[i, :ki], want,
+                                      err_msg=f"row {i} k={ki}")
+        assert (out[i, ki:] == INF_DOCID).all()
+
+
+def test_uniform_k_array_collapses_to_scalar_path(built):
+    qidx, kept = built
+    fe = QACFrontend(qidx, k=10)
+    rng = np.random.default_rng(8)
+    batch = _mixed_batch(kept, rng, 16, 50)
+    pids, plen, pok, suf, slen = parse_queries(qidx.dictionary, batch)
+    want = np.asarray(fe.complete(pids, plen, suf, slen, k=10))
+    got = np.asarray(fe.complete(pids, plen, suf, slen,
+                                 k=np.full(16, 10, np.int32)))
+    np.testing.assert_array_equal(got, want)
+    assert {key[2] for key in fe._cache} == {10}
+    # a uniform TAIL k must still take the bucketed path (k=21 -> 32), or
+    # every distinct uniform k would mint a raw jit variant of its own
+    got21 = np.asarray(fe.complete(pids, plen, suf, slen,
+                                   k=np.full(16, 21, np.int32)))
+    assert got21.shape == (16, 21)
+    assert {key[2] for key in fe._cache} == {10, 32}
+
+
 def test_route_classes_partition(built):
     qidx, kept = built
     rng = np.random.default_rng(6)
