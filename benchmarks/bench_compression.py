@@ -1,10 +1,32 @@
-"""Paper Table 4: inverted-index compression in bits per integer."""
+"""Paper Table 4: inverted-index compression in bits per integer.
+
+ISSUE 7 adds the device block format (``core.codecs.pack_postings``): the
+``qac_postings_bpi_{raw,bitpack,ef}`` keys measure the layout the kernels
+actually decode on-chip (per-128 block directory included), and the
+``qac_postings_decode_*_mips`` keys its random-access decode bandwidth
+(jit'd ``packed_lookup`` over the full stream, vs a raw int32 gather) —
+the cost side of the compressed-fit routing trade.
+"""
 from __future__ import annotations
 
 import numpy as np
+import jax
+import jax.numpy as jnp
 
-from .common import bench_corpus, emit, QUICK
-from repro.core.codecs import index_bpi, ef_encode, ef_decode, vbyte_encode, vbyte_decode
+from .common import bench_corpus, emit, timer, QUICK, write_bench_json
+from repro.core.codecs import (index_bpi, ef_encode, ef_decode, vbyte_encode,
+                               vbyte_decode, pack_postings, packed_lookup,
+                               unpack_postings)
+
+
+def _decode_rate(pk, ptrs):
+    """Random-access decode bandwidth in million ints/second."""
+    fn = jax.jit(lambda p: packed_lookup(
+        pk.words, pk.base, pk.meta, pk.wordoff, p,
+        n_post=pk.n_post, ef=pk.has_ef))
+    fn(ptrs).block_until_ready()
+    t = timer(lambda: fn(ptrs).block_until_ready(), repeats=5)
+    return ptrs.shape[0] / t / 1e6
 
 
 def main():
@@ -21,6 +43,29 @@ def main():
     for l in lists[:20]:
         assert (ef_decode(ef_encode(l)) == l).all()
         assert (vbyte_decode(vbyte_encode(l), len(l)) == l).all()
+
+    # -- device block format (ISSUE 7): what the kernels decode on-chip -----
+    postings = np.asarray(qidx.index.postings, dtype=np.int64)
+    emit("qac_postings_bpi_raw", 32.0, f"n_post={len(postings)}")
+    ptrs = jnp.asarray(np.arange(len(postings), dtype=np.int32))
+    raw_dev = jnp.asarray(postings.astype(np.int32))
+    g = jax.jit(lambda p: raw_dev[p])
+    g(ptrs).block_until_ready()
+    t_raw = timer(lambda: g(ptrs).block_until_ready(), repeats=5)
+    emit("qac_postings_decode_raw_mips", len(postings) / t_raw / 1e6,
+         "plain int32 gather baseline")
+    for codec in ("bitpack", "ef"):
+        pk = pack_postings(postings, codec)
+        assert (unpack_postings(pk) == postings).all()
+        bpi = pk.bits_per_int()
+        emit(f"qac_postings_bpi_{codec}", bpi,
+             f"ratio={32.0 / bpi:.2f}x,bytes={pk.nbytes()}")
+        rate = _decode_rate(pk, ptrs)
+        emit(f"qac_postings_decode_{codec}_mips", rate,
+             f"raw_gather_mips={len(postings) / t_raw / 1e6:.1f},"
+             f"n_post={len(postings)}")
+
+    write_bench_json()
 
 
 if __name__ == "__main__":

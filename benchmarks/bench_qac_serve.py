@@ -21,6 +21,14 @@ through the micro-batching runtime (serve/runtime.py), emitting the
 ``qac_online_p50/p95/p99/mean_us`` + ``qac_online_cache_hit_rate`` keys —
 END-TO-END per-request latency under arrival dynamics — gated on parity
 with naive per-request dispatch, >=30% hit rate, and >=2x mean speedup.
+ISSUE 7 adds the compressed heap route:
+``qac_single_engine_kernel_compressed_b256`` times the single-term engine
+decoding ef-packed postings inside the heap route (gated at <=1.5x the raw
+kernel key — the decode cost that buys the VMEM headroom), and the
+``qac_kernel_corpus_scale*`` sweep demonstrates the payoff: a dense corpus
+plus a VMEM ceiling where raw CSR does NOT fit but the compressed stream
+does (>=3x compression), with the compressed route still beating the
+engine's own vmap-of-scalar reference.
 """
 from __future__ import annotations
 
@@ -112,12 +120,15 @@ def main():
     # reference formulation elsewhere (kernel_route notes which ran).
     uk = default_use_kernel()
     kernel_route = "pallas" if uk else "xla_ref"
+    kernel_t = {}
+    single_inputs = {}
     for B in ENGINE_BATCHES:
         singles = []
         while len(singles) < B:
             t = kept[rng.integers(0, len(kept))].split()[0]
             singles.append(t[: rng.integers(1, len(t) + 1)])
         _, _, _, suf, slen = parse_queries(qidx.dictionary, singles)
+        single_inputs[B] = (suf, slen)
         f_vmap = jax.jit(
             lambda c, d: serve_single_term_vmap(qidx, c, d, k=10)[0])
         # heap_kernel=False pins the PR-2 per-pop engine so this key keeps
@@ -138,6 +149,93 @@ def main():
              f"qps={B/t_b:.0f},speedup={t_v/t_b:.2f}x")
         emit(f"qac_single_engine_kernel_b{B}", t_k / B * 1e6,
              f"qps={B/t_k:.0f},route={kernel_route},speedup={t_v/t_k:.2f}x")
+        kernel_t[B] = t_k
+
+    # -- compressed heap route (ISSUE 7 tentpole) ----------------------------
+    # the same heap route decoding ef-packed postings in place of raw CSR:
+    # parity is bit-exact by the packed_lookup contract; the acceptance gate
+    # bounds the decode overhead at 1.5x the raw kernel key — the price paid
+    # for fitting a 3x bigger corpus under the same VMEM ceiling
+    B = 256
+    suf, slen = single_inputs[B]
+    f_raw = jax.jit(lambda c, d: serve_single_term(
+        qidx, c, d, k=10, use_kernel=uk, heap_kernel=True)[0])
+    f_pk = jax.jit(lambda c, d: serve_single_term(
+        qidx, c, d, k=10, use_kernel=uk, heap_kernel=True,
+        postings_codec="ef")[0])
+    np.testing.assert_array_equal(np.asarray(f_raw(suf, slen)),
+                                  np.asarray(f_pk(suf, slen)))
+    t_pk = timer(lambda: f_pk(suf, slen).block_until_ready(), repeats=7)
+    emit(f"qac_single_engine_kernel_compressed_b{B}", t_pk / B * 1e6,
+         f"qps={B/t_pk:.0f},route={kernel_route},"
+         f"vs_raw_kernel={t_pk/kernel_t[B]:.2f}x,"
+         f"bpi={qidx.index.packed.bits_per_int():.2f}")
+    assert t_pk <= 1.5 * kernel_t[B], \
+        (f"compressed heap route {t_pk/B*1e6:.1f} us/q exceeds 1.5x the raw "
+         f"kernel route {kernel_t[B]/B*1e6:.1f} us/q at B={B}")
+
+    # -- kernel-eligible corpus scale (ISSUE 7 payoff) -----------------------
+    # the point of in-kernel decode: corpora whose raw CSR blows the VMEM
+    # ceiling but whose packed stream fits. Sweep corpus size with a dense
+    # vocabulary (long postings lists — where ef earns its keep), set the
+    # ceiling between the raw and packed footprints, and show the compressed
+    # heap route is (a) the only kernel-eligible one and (b) still faster
+    # than the engine's own vmap-of-scalar reference at that scale.
+    from repro.core import build_qac_index
+    from repro.core.search import _heap_kernel_fits
+    from repro.text import SynthLogConfig, generate_query_log
+
+    sizes = (2_000, 6_000) if QUICK else (2_000, 6_000, 15_000)
+    scale_rng = np.random.default_rng(77)
+    last = None
+    for n in sizes:
+        qs2, sc2 = generate_query_log(SynthLogConfig(
+            n_queries=n, vocab_size=max(n // 40, 200), mean_term_chars=5.0,
+            seed=77))
+        qidx2, kept2, _ = build_qac_index(qs2, sc2, postings_codec="ef")
+        idx2, rm2 = qidx2.index, qidx2.rmq_minimal
+        raw_bytes = 4 * int(idx2.postings.size)
+        pk_bytes = idx2.packed.nbytes()
+        ratio = raw_bytes / pk_bytes
+        overhead = 4 * int(rm2.values.size + rm2.st_pos.size + rm2.ib.size
+                           + idx2.offsets.size)
+        ceiling = overhead + (raw_bytes + pk_bytes) // 2
+        fit_raw = _heap_kernel_fits(idx2, rm2, max_bytes=ceiling)
+        fit_pk = _heap_kernel_fits(idx2, rm2, packed=idx2.packed,
+                                   max_bytes=ceiling)
+        B2 = 256
+        singles = []
+        while len(singles) < B2:
+            t = kept2[scale_rng.integers(0, len(kept2))].split()[0]
+            singles.append(t[: scale_rng.integers(1, len(t) + 1)])
+        _, _, _, suf2, slen2 = parse_queries(qidx2.dictionary, singles)
+        f_ref = jax.jit(lambda c, d, q=qidx2: serve_single_term_vmap(
+            q, c, d, k=10)[0])
+        f_pk2 = jax.jit(lambda c, d, q=qidx2, mb=ceiling: serve_single_term(
+            q, c, d, k=10, use_kernel=uk, heap_kernel=True,
+            postings_codec="ef", heap_kernel_max_bytes=mb)[0])
+        np.testing.assert_array_equal(np.asarray(f_ref(suf2, slen2)),
+                                      np.asarray(f_pk2(suf2, slen2)))
+        t_ref = timer(lambda: f_ref(suf2, slen2).block_until_ready(),
+                      repeats=5)
+        t_pk2 = timer(lambda: f_pk2(suf2, slen2).block_until_ready(),
+                      repeats=5)
+        emit(f"qac_kernel_corpus_scale_n{n}", t_pk2 / B2 * 1e6,
+             f"ratio={ratio:.2f}x,fit_raw={fit_raw},fit_pk={fit_pk},"
+             f"vmap_us={t_ref/B2*1e6:.3f},speedup={t_ref/t_pk2:.2f}x")
+        last = (n, ratio, fit_raw, fit_pk, t_ref, t_pk2)
+    n, ratio, fit_raw, fit_pk, t_ref, t_pk2 = last
+    emit("qac_kernel_corpus_scale", ratio,
+         f"largest_n={n},only_compressed_fits={fit_pk and not fit_raw},"
+         f"vs_vmap={t_ref/t_pk2:.2f}x")
+    assert ratio >= 3.0, \
+        f"ef compression {ratio:.2f}x below the 3x floor at n={n}"
+    assert fit_pk and not fit_raw, \
+        (f"ceiling {ceiling} should admit only the packed stream "
+         f"(raw={raw_bytes + overhead}, packed={pk_bytes + overhead})")
+    assert t_pk2 <= t_ref, \
+        (f"compressed heap route {t_pk2/B2*1e6:.1f} us/q slower than its "
+         f"vmap reference {t_ref/B2*1e6:.1f} us/q at n={n}")
 
     # fused path, mixed traffic: batched vs vmap. ISSUE 3 acceptance: the
     # batched fused engine must not regress below the vmap reference again
@@ -149,10 +247,16 @@ def main():
     g_bat = jax.jit(lambda a, b, c, d: qac_serve_step(qidx, a, b, c, d, k=10))
     np.testing.assert_array_equal(np.asarray(g_vmap(pids, plen, sufm, slenm)),
                                   np.asarray(g_bat(pids, plen, sufm, slenm)))
-    t_v = timer(lambda: g_vmap(pids, plen, sufm, slenm).block_until_ready(),
-                repeats=5)
-    t_b = timer(lambda: g_bat(pids, plen, sufm, slenm).block_until_ready(),
-                repeats=5)
+    # best-of-3 interleaved timings: on a loaded 1-CPU runner single mean
+    # readings of these two ~ms-scale paths swing past the 10% gate margin
+    t_v, t_b = np.inf, np.inf
+    for _ in range(3):
+        t_v = min(t_v, timer(
+            lambda: g_vmap(pids, plen, sufm, slenm).block_until_ready(),
+            repeats=5))
+        t_b = min(t_b, timer(
+            lambda: g_bat(pids, plen, sufm, slenm).block_until_ready(),
+            repeats=5))
     emit(f"qac_fused_engine_vmap_b{B}", t_v / B * 1e6, f"qps={B/t_v:.0f}")
     emit(f"qac_fused_engine_batched_b{B}", t_b / B * 1e6,
          f"qps={B/t_b:.0f},speedup={t_v/t_b:.2f}x")
@@ -178,18 +282,19 @@ def main():
         n_sessions=n_sessions, queries_per_session=1 if QUICK else 2,
         seed=31))
     reqs = prepare_requests(qidx, trace, k=10)
-    # slack sized to the host-CPU engine (~ms service): big enough to form
-    # real micro-batches, small enough that a miss's deadline wait doesn't
-    # dwarf the per-dispatch cost it amortizes
-    rt = QACOnlineRuntime(
-        QACFrontend(qidx, k=10, specialize_list_pad=False),
-        RuntimeConfig(max_batch=64, slack_us=5_000.0))
+    # naive reference first: one-request-per-dispatch serving is both the
+    # bit-identity oracle AND the service-cost yardstick that sizes the
+    # scheduler's slack below — a deadline wait is only worth roughly one
+    # dispatch it amortizes away, and a hard-coded budget goes stale
+    # whenever the engines (or the runner's load) shift the B=1 cost.
+    # complete() is pure, so sharing the (warm) frontend with the runtime
+    # gives identical rows with no duplicate compiles
+    fe = QACFrontend(qidx, k=10, specialize_list_pad=False)
+    naive_rows, naive = run_naive_trace(fe, reqs)
+    slack_us = float(np.clip(naive["mean_us"], 500.0, 5_000.0))
+    rt = QACOnlineRuntime(fe, RuntimeConfig(max_batch=64, slack_us=slack_us))
     online_rows = rt.replay(reqs)
     snap = rt.telemetry.snapshot()
-    # same (warm) frontend: complete() is pure — identical reference rows,
-    # no duplicate compiles; run_naive_trace's own warm loop still covers
-    # the B=1 shapes before any timing
-    naive_rows, naive = run_naive_trace(rt.fe, reqs)
     for i, (g, w) in enumerate(zip(online_rows, naive_rows)):
         assert np.array_equal(g, w), \
             f"online runtime parity break at request {i} ({reqs[i].query!r})"
@@ -205,7 +310,7 @@ def main():
     emit("qac_online_p99_us", snap["p99_us"],
          f"queue_peak={snap['queue_peak']}")
     emit("qac_online_mean_us", snap["mean_us"],
-         f"naive_mean_us={naive['mean_us']:.1f},"
+         f"naive_mean_us={naive['mean_us']:.1f},slack_us={slack_us:.0f},"
          f"speedup={naive['mean_us']/max(snap['mean_us'], 1e-9):.2f}x")
     emit("qac_online_cache_hit_rate", snap["cache_hit_rate"],
          ",".join(f"{p}={c}" for p, c in sorted(snap["paths"].items())))

@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # Seed gate: catches jax import-drift and serving regressions before merge.
-#   1. kernel parity fast-fail: the heap_topk + batched-engine suites first
-#      (bit-identity of every kernel route vs the vmap references) so a
-#      broken kernel fails in ~2 min instead of after the whole tier-1 run;
+#   1. kernel parity fast-fail: the codec round-trip/compressed-parity,
+#      heap_topk and batched-engine suites first (bit-identity of every
+#      kernel route — raw CSR and packed ef/bitpack — vs the vmap
+#      references) so a broken kernel or codec fails in ~2 min instead of
+#      after the whole tier-1 run;
 #   2. online-runtime smoke: a short keystroke trace through
 #      `launch/serve.py --online --check` (micro-batch scheduler + prefix/
 #      session caches), asserting parity with naive per-request dispatch
@@ -18,8 +20,9 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== kernel parity: heap_topk + batched engines =="
-python -m pytest -x -q tests/test_heap_topk.py tests/test_batched_engines.py
+echo "== kernel parity: codecs + heap_topk + batched engines =="
+python -m pytest -x -q tests/test_codecs.py tests/test_heap_topk.py \
+    tests/test_batched_engines.py
 
 echo "== online-runtime smoke: scheduler + prefix-cache parity =="
 # short keystroke trace through the micro-batching runtime; --check asserts
@@ -29,7 +32,8 @@ python -m repro.launch.serve --online --check --queries 3000 --sessions 64 \
     --slack-us 5000
 
 echo "== tier-1: pytest =="
-python -m pytest -x -q --ignore=tests/test_heap_topk.py \
+python -m pytest -x -q --ignore=tests/test_codecs.py \
+    --ignore=tests/test_heap_topk.py \
     --ignore=tests/test_batched_engines.py
 
 echo "== quick-mode serving benchmark (incl. heap_topk bench) =="

@@ -21,7 +21,8 @@ import inspect
 import jax
 
 __all__ = ["shard_map", "tpu_compiler_params", "HAS_NATIVE_SHARD_MAP",
-           "is_tpu_backend", "pallas_interpret_default", "default_use_kernel"]
+           "is_tpu_backend", "pallas_interpret_default", "default_use_kernel",
+           "default_heap_kernel_max_bytes"]
 
 
 def _resolve_shard_map():
@@ -79,6 +80,22 @@ def default_use_kernel() -> bool:
     ``use_kernel: bool | None = None`` and resolve None here.
     """
     return is_tpu_backend()
+
+
+def default_heap_kernel_max_bytes() -> int:
+    """Platform-resolved VMEM ceiling for the fused heap_topk kernel.
+
+    The kernel pins the engine's source arrays (RMQ values + sparse table +
+    ib windows as int32, offsets, and raw or compressed postings) in VMEM
+    for the whole launch, plus 5·bt·cap·4 bytes of heap scratch. Current
+    TPU generations give ~16 MiB of VMEM per core; 12 MiB leaves headroom
+    for scratch + double-buffered lane tiles on every generation we target,
+    so that is the default everywhere (off-TPU the interpreter has no real
+    ceiling, but routing parity with TPU matters more than a bigger gate).
+    Callers take ``max_bytes: int | None = None`` (None = resolve here);
+    ``QACArch.heap_kernel_max_bytes`` is the config-level override.
+    """
+    return 12 << 20
 
 
 def tpu_compiler_params(**kwargs):

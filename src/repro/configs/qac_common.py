@@ -43,6 +43,14 @@ class QACArch:
     # exceed the budget, so its stripes take the per-pop batched-RMQ route;
     # smaller cells may force the fused kernel with True)
     heap_kernel: bool | None = None
+    # postings device layout for the kernel routes (ISSUE 7): "auto"
+    # prefers raw CSR when it fits the heap-kernel VMEM ceiling and falls
+    # back to the compressed stream; "ef"/"bitpack" force in-kernel decode
+    # (and size packed specs into index_specs); "raw" disables it
+    postings_codec: str | None = "auto"
+    # heap-kernel VMEM ceiling in bytes; None resolves to the platform
+    # default (repro.compat.default_heap_kernel_max_bytes)
+    heap_kernel_max_bytes: int | None = None
     # online serving runtime (serve/runtime.py): micro-batch formation +
     # the keystroke-locality caches. slack_us is the batching deadline per
     # request (arrival + slack), a budget spent buying batch occupancy —
@@ -79,6 +87,21 @@ class QACArch:
         nb = n_pad // 128
         levels = max(1, int(np.ceil(np.log2(nb))) + 1)
         S = n_stripes
+        pk_specs = {}
+        if self.postings_codec not in (None, "auto", "raw"):
+            # packed-postings specs (ISSUE 7): the block directory is exact
+            # (NB = ceil(p_pad / 128)); the word stream is provisioned at a
+            # 16-bpi ceiling — real builds land well under (EF ~11 bpi) and
+            # build_striped zero-pads to whatever it actually emits
+            nb_pk = -(-p_pad // 128)
+            w_pad = ((p_pad // 2) + 127) // 128 * 128
+            pk_specs = dict(
+                pp_words=sds((S, w_pad), jnp.int32),
+                pp_base=sds((S, nb_pk), jnp.int32),
+                pp_meta=sds((S, nb_pk), jnp.int32),
+                pp_wordoff=sds((S, nb_pk), jnp.int32),
+                pp_codec=self.postings_codec,
+            )
         striped = StripedQACIndex(
             postings=sds((S, p_pad), jnp.int32),
             offsets=sds((S, vpad), jnp.int32),
@@ -90,6 +113,7 @@ class QACArch:
             rmq_ib=sds((S, IB_LEVELS, n_pad), jnp.int8),
             n_stripes=S, n_terms=V, n_local_docs=n_loc, postings_pad=p_pad,
             max_terms=M, rmq_levels=levels, rmq_blocks=nb,
+            **pk_specs,
         )
         C = n_chunks(MAX_TERM_CHARS)
         dictionary = TermDictionary(
@@ -121,13 +145,17 @@ class QACArch:
                       else self.use_kernel)
 
         heap_kernel = self.heap_kernel
+        postings_codec = self.postings_codec
+        heap_kernel_max_bytes = self.heap_kernel_max_bytes
 
         def fn(striped, dictionary, pids, plen, schars, slen):
             # §Perf it1 winner: butterfly merge (k·log2(S) vs k·S wire ints)
             return qac_serve_striped(striped, dictionary, pids, plen, schars,
                                      slen, k=k, mesh=mesh, merge="butterfly",
                                      use_kernel=use_kernel,
-                                     heap_kernel=heap_kernel)
+                                     heap_kernel=heap_kernel,
+                                     postings_codec=postings_codec,
+                                     heap_kernel_max_bytes=heap_kernel_max_bytes)
 
         # "model flops": integer comparisons dominate; report probe count
         probes = B * (MAX_TERMS * 31 + k * 4)

@@ -69,8 +69,15 @@ def build_corpus(queries: Sequence[str], scores: Sequence[float],
 def build_qac_index(queries: Sequence[str], scores: Sequence[float],
                     k_default: int = 10,
                     max_terms: int = MAX_TERMS,
-                    max_term_chars: int = MAX_TERM_CHARS):
-    """Full pipeline: scored log -> all paper data structures."""
+                    max_term_chars: int = MAX_TERM_CHARS,
+                    postings_codec: str | None = "ef"):
+    """Full pipeline: scored log -> all paper data structures.
+
+    ``postings_codec`` ("ef" default, "bitpack", or None) controls the
+    compressed device layout emitted alongside raw CSR (see
+    ``InvertedIndex.build``); serving routes pick raw or packed per the
+    VMEM gate (``core.search`` ``postings_codec`` knob).
+    """
     dictionary, rows, sc, kept = build_corpus(
         queries, scores, max_terms, max_term_chars
     )
@@ -81,7 +88,8 @@ def build_qac_index(queries: Sequence[str], scores: Sequence[float],
     )
     d_of_row = np.empty(len(rows), dtype=np.int32)
     d_of_row[order] = np.arange(len(rows), dtype=np.int32)
-    inv = InvertedIndex.build(rows, d_of_row, dictionary.n_terms)
+    inv = InvertedIndex.build(rows, d_of_row, dictionary.n_terms,
+                              postings_codec=postings_codec)
     rmq_doc = RangeMin.build(np.asarray(comps.docids))
     rmq_min = inv.build_minimal_rmq()
     qidx = QACIndex(

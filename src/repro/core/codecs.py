@@ -1,15 +1,44 @@
-"""Posting-list compression codecs (paper §3.2 / Table 4).
+"""Posting-list compression codecs (paper §3.2 / Table 4) + the device format.
 
-Host-side (numpy) bit-exact encoders/decoders for the space study. The paper
-evaluates BIC/DINT/PEF/EF/OptVB/VB/Simple16 and picks Elias-Fano for its
-space/time balance; we implement EF, partitioned EF (uniform partitions),
-VByte, and delta+fixed-width bitpacking, and report bits-per-integer the
-same way. (BIC/DINT are omitted: BIC's recursion is ~3x slower to decode in
-the paper's own Table 4 and was not chosen; DINT needs a trained dictionary.)
+Two layers live here:
 
-The JAX-side serving index keeps raw CSR int32 (DESIGN.md §2: on TPU the
-further space/time trade to raw arrays is the same move the paper makes when
-it prefers EF over BIC); these codecs quantify exactly what that trade costs.
+1. **Space-study codecs** (host-side numpy, bit-exact): the paper evaluates
+   BIC/DINT/PEF/EF/OptVB/VB/Simple16 and picks Elias-Fano for its space/time
+   balance; we implement EF, partitioned EF (uniform partitions), VByte, and
+   delta+fixed-width bitpacking, and report bits-per-integer the same way.
+   (BIC/DINT are omitted: BIC's recursion is ~3x slower to decode in the
+   paper's own Table 4 and was not chosen; DINT needs a trained dictionary.)
+
+2. **The device block format** (``PackedPostings``): the serving index no
+   longer has to keep raw CSR int32 on-chip.  Postings are split into
+   ``PACK_BLOCK``-entry blocks; each block stores deltas from the block
+   minimum either fixed-width bitpacked or as a per-block Elias-Fano pair
+   (256-bit upper-bits bitmap + fixed-width lows), whichever is smaller,
+   into a single int32 word stream with a per-block
+   (base docid, bit-width|is_ef, word offset) directory.  ``packed_lookup``
+   is the O(1) random-access decoder written in pure shift/mask jnp — the
+   SAME function body executes inside the Pallas kernels (on VMEM-resident
+   words) and as the XLA reference, so the compressed route is bit-identical
+   to the raw-CSR engines by construction.  ``_heap_kernel_fits`` in
+   ``core.search`` is what spends the saved bytes: corpora whose raw CSR
+   busts the VMEM ceiling can still take the fused-kernel route compressed.
+
+Stream layout (all bit offsets little-endian within int32 words):
+
+  block b (= postings[128*b : 128*(b+1)], tail blocks padded by repeating
+  the last value; pads are never addressable because lookups clamp to
+  ``n_post - 1``):
+    base[b]    = min(block)                      -- int32 directory
+    meta[b]    = width | (is_ef << 6)
+    wordoff[b] = first int32 word of the block's payload
+  bitpack payload: 128 deltas at ``width`` bits each  -> 4*width words
+  EF payload:      8-word bitmap with bit (j + high_j) set, where
+                   high_j = delta_j >> width (width = the EF low-bit count
+                   l = max(0, msb-7)), followed by 128 packed ``width``-bit
+                   lows                          -> 8 + 4*width words
+  EF is chosen per block only when the block is sorted and the EF payload
+  is strictly smaller; ``codec="bitpack"`` disables it globally so the
+  decoder can skip the bitmap-select gathers.
 """
 from __future__ import annotations
 
@@ -17,47 +46,139 @@ import dataclasses
 import math
 
 import numpy as np
+import jax.numpy as jnp
+from jax import lax
+
+from .types import pytree_dataclass
+
+_U64 = np.uint64
+_FULL64 = (1 << 64) - 1
 
 
 # ---------------------------------------------------------------- bit I/O
 class BitWriter:
+    """Append-only little-endian bit stream over uint64 words.
+
+    Word-level numpy throughout: ``write``/``unary`` are O(bits/64) scalar
+    ops, ``write_many``/``unary_many`` are fully vectorized (one
+    ``bitwise_or.at`` scatter per word touched) — the per-bit Python loops
+    this replaces dominated both index build and ``bench_compression``.
+    """
+
     def __init__(self):
-        self.words: list[int] = [0]
-        self.bit = 0
+        self._words = np.zeros(4, dtype=_U64)
+        self._nbits = 0
 
-    def write(self, value: int, n_bits: int):
-        v = int(value)
-        for i in range(n_bits):
-            if v >> i & 1:
-                self.words[-1] |= 1 << self.bit
-            self.bit += 1
-            if self.bit == 64:
-                self.words.append(0)
-                self.bit = 0
+    def _reserve(self, nbits: int) -> None:
+        need = (nbits + 63) >> 6
+        if need > len(self._words):
+            grown = np.zeros(max(need, 2 * len(self._words)), dtype=_U64)
+            grown[: len(self._words)] = self._words
+            self._words = grown
 
-    def unary(self, n: int):
+    def write(self, value: int, n_bits: int) -> None:
+        if n_bits <= 0:
+            return
+        v = int(value) & ((1 << n_bits) - 1)
+        pos = self._nbits
+        self._reserve(pos + n_bits)
+        self._nbits = pos + n_bits
+        w, b = divmod(pos, 64)
+        while True:
+            self._words[w] |= _U64((v << b) & _FULL64)
+            take = 64 - b
+            if n_bits <= take:
+                return
+            v >>= take
+            n_bits -= take
+            w += 1
+            b = 0
+
+    def write_many(self, values: np.ndarray, n_bits: int) -> None:
+        """Append ``len(values)`` fields of ``n_bits`` bits each."""
+        vals = np.asarray(values).astype(_U64)
+        n = len(vals)
+        if n == 0 or n_bits == 0:
+            return
+        assert 0 < n_bits <= 64
+        if n_bits < 64:
+            vals = vals & _U64((1 << n_bits) - 1)
+        pos0 = self._nbits
+        self._reserve(pos0 + n * n_bits)
+        pos = _U64(pos0) + np.arange(n, dtype=_U64) * _U64(n_bits)
+        w = (pos >> _U64(6)).astype(np.int64)
+        b = pos & _U64(63)
+        np.bitwise_or.at(self._words, w, vals << b)
+        spill = (b + _U64(n_bits)) > _U64(64)
+        if spill.any():
+            bs = b[spill]
+            np.bitwise_or.at(self._words, w[spill] + 1,
+                             vals[spill] >> (_U64(64) - bs))
+        self._nbits = pos0 + n * n_bits
+
+    def unary(self, n: int) -> None:
         self.write(0, n)
         self.write(1, 1)
 
+    def unary_many(self, gaps: np.ndarray) -> None:
+        """Append one unary code (``gap`` zeros then a one) per entry."""
+        g = np.asarray(gaps, dtype=np.int64)
+        if len(g) == 0:
+            return
+        stops = self._nbits + np.cumsum(g + 1) - 1
+        end = int(stops[-1]) + 1
+        self._reserve(end)
+        np.bitwise_or.at(self._words, (stops >> 6).astype(np.int64),
+                         _U64(1) << (stops.astype(_U64) & _U64(63)))
+        self._nbits = end
+
+    def pad_to(self, n_bits: int) -> None:
+        """Advance the cursor to an absolute bit position (zero fill)."""
+        assert n_bits >= self._nbits
+        self._reserve(n_bits)
+        self._nbits = n_bits
+
     def n_bits(self) -> int:
-        return (len(self.words) - 1) * 64 + self.bit
+        return self._nbits
 
     def array(self) -> np.ndarray:
-        return np.asarray(self.words, dtype=np.uint64)
+        return self._words[: max(1, (self._nbits + 63) >> 6)].copy()
 
 
 class BitReader:
+    """Cursor over a BitWriter stream; same word-level discipline."""
+
     def __init__(self, words: np.ndarray):
-        self.words = words
+        self.words = np.asarray(words, dtype=_U64)
         self.pos = 0
 
     def read(self, n_bits: int) -> int:
         out = 0
-        for i in range(n_bits):
+        got = 0
+        while got < n_bits:
             w, b = divmod(self.pos, 64)
-            out |= ((int(self.words[w]) >> b) & 1) << i
-            self.pos += 1
+            take = min(64 - b, n_bits - got)
+            out |= ((int(self.words[w]) >> b) & ((1 << take) - 1)) << got
+            got += take
+            self.pos += take
         return out
+
+    def read_many(self, count: int, n_bits: int) -> np.ndarray:
+        """Read ``count`` fields of ``n_bits`` bits -> int64[count]."""
+        if count == 0 or n_bits == 0:
+            return np.zeros(count, dtype=np.int64)
+        assert 0 < n_bits <= 63
+        L = len(self.words)
+        pos = _U64(self.pos) + np.arange(count, dtype=_U64) * _U64(n_bits)
+        w = (pos >> _U64(6)).astype(np.int64)
+        b = pos & _U64(63)
+        lo = self.words[w] >> b
+        w1 = np.minimum(w + 1, L - 1)
+        sh = (_U64(64) - b) & _U64(63)
+        hi = np.where(b == 0, _U64(0), self.words[w1] << sh)
+        out = (lo | hi) & _U64((1 << n_bits) - 1)
+        self.pos += count * n_bits
+        return out.astype(np.int64)
 
     def unary(self) -> int:
         n = 0
@@ -68,6 +189,21 @@ class BitReader:
             if bit:
                 return n
             n += 1
+
+    def unary_many(self, count: int) -> np.ndarray:
+        """Decode ``count`` unary codes -> int64[count] (the zero runs)."""
+        if count == 0:
+            return np.zeros(0, dtype=np.int64)
+        w0 = self.pos >> 6
+        tail = self.words[w0:]
+        if not np.little_endian:  # pragma: no cover - scalar fallback
+            return np.array([self.unary() for _ in range(count)], np.int64)
+        bits = np.unpackbits(tail.view(np.uint8), bitorder="little")
+        bits = bits[self.pos - (w0 << 6):]
+        ones = np.flatnonzero(bits)[:count]
+        assert len(ones) == count, "unary stream truncated"
+        self.pos += int(ones[-1]) + 1
+        return np.diff(ones, prepend=np.int64(-1)) - 1
 
 
 # ---------------------------------------------------------------- Elias-Fano
@@ -91,27 +227,18 @@ def ef_encode(values: np.ndarray, universe: int | None = None) -> EFList:
     u = int(universe if universe is not None else (v[-1] + 1 if n else 1))
     l = max(0, int(math.floor(math.log2(max(u, 1) / max(n, 1))))) if n else 0
     w = BitWriter()
-    # low bits, packed
-    for x in v:
-        w.write(int(x) & ((1 << l) - 1), l)
-    # high bits, unary-coded gaps
-    prev = 0
-    for x in v:
-        h = int(x) >> l
-        w.unary(h - prev)
-        prev = h
+    if n:
+        # low bits, packed; then high bits as unary-coded gaps
+        w.write_many(v & ((1 << l) - 1), l)
+        w.unary_many(np.diff(v >> l, prepend=np.int64(0)))
     return EFList(words=w.array(), n=n, universe=u, low_bits=l)
 
 
 def ef_decode(ef: EFList) -> np.ndarray:
     r = BitReader(ef.words)
-    lows = [r.read(ef.low_bits) for _ in range(ef.n)]
-    out = np.empty(ef.n, dtype=np.int64)
-    h = 0
-    for i in range(ef.n):
-        h += r.unary()
-        out[i] = (h << ef.low_bits) | lows[i]
-    return out
+    lows = r.read_many(ef.n, ef.low_bits)
+    high = np.cumsum(r.unary_many(ef.n)) if ef.n else lows
+    return (high << ef.low_bits) | lows
 
 
 def pef_bits(values: np.ndarray, partition: int = 128) -> int:
@@ -129,8 +256,7 @@ def pef_bits(values: np.ndarray, partition: int = 128) -> int:
 # ---------------------------------------------------------------- VByte
 def vbyte_encode(values: np.ndarray) -> bytes:
     v = np.asarray(values, dtype=np.int64)
-    deltas = np.diff(v, prepend=np.int64(-1)) - 0  # gaps (first = v[0]+1... )
-    deltas = np.concatenate([[v[0] + 1], np.diff(v)]) if len(v) else deltas[:0]
+    deltas = np.concatenate([[v[0] + 1], np.diff(v)]) if len(v) else v
     out = bytearray()
     for d in deltas:
         d = int(d)
@@ -165,6 +291,11 @@ def vbyte_decode(data: bytes, n: int) -> np.ndarray:
 
 
 # ---------------------------------------------------------------- bitpacked deltas
+def _bit_length(x: np.ndarray) -> np.ndarray:
+    """Vectorized int bit_length; exact for 0 <= x < 2**53."""
+    return np.frexp(np.asarray(x, dtype=np.float64))[1].astype(np.int64)
+
+
 def bitpack_bits(values: np.ndarray, block: int = 128) -> int:
     """Delta + per-block fixed-width packing (FastPFor-lite), size only."""
     v = np.asarray(values, dtype=np.int64)
@@ -174,7 +305,7 @@ def bitpack_bits(values: np.ndarray, block: int = 128) -> int:
     total = 0
     for i in range(0, len(gaps), block):
         chunk = gaps[i : i + block]
-        width = max(1, int(chunk.max()).bit_length())
+        width = max(1, int(_bit_length(chunk.max())))
         total += 8 + width * len(chunk)   # 8-bit width header
     return total
 
@@ -200,3 +331,188 @@ def index_bpi(lists: list[np.ndarray], method: str) -> float:
         else:
             raise ValueError(method)
     return bits / max(n, 1)
+
+
+# ------------------------------------------------- device block format
+PACK_BLOCK = 128          # postings per block (= one VPU lane tile)
+EF_BITMAP_WORDS = 8       # 256-bit upper-bits bitmap per EF block
+_META_EF_BIT = 6          # meta = width | (is_ef << _META_EF_BIT)
+
+
+@pytree_dataclass(meta_fields=("n_post", "codec"))
+class PackedPostings:
+    """Device-layout compressed postings (see module docstring).
+
+    ``codec`` records the build-time choice: "ef" allows per-block EF
+    payloads (bitmap-select decode), "bitpack" forbids them so
+    ``packed_lookup(..., ef=False)`` can skip the bitmap gathers entirely.
+    """
+
+    words: jnp.ndarray     # int32[W] payload bit stream
+    base: jnp.ndarray      # int32[NB] per-block minimum docid
+    meta: jnp.ndarray      # int32[NB] width | is_ef<<6
+    wordoff: jnp.ndarray   # int32[NB] first payload word per block
+    n_post: int
+    codec: str
+
+    @property
+    def has_ef(self) -> bool:
+        return self.codec == "ef"
+
+    def nbytes(self) -> int:
+        return 4 * (int(self.words.shape[0]) + 3 * int(self.base.shape[0]))
+
+    def bits_per_int(self) -> float:
+        return self.nbytes() * 8.0 / max(self.n_post, 1)
+
+
+def pack_postings(postings: np.ndarray, codec: str = "ef") -> PackedPostings:
+    """Encode a postings array into the device block format."""
+    if codec not in ("ef", "bitpack"):
+        raise ValueError(f"unknown packed codec {codec!r}")
+    v = np.asarray(postings, dtype=np.int64).ravel()
+    n = int(v.size)
+    nb = max(1, -(-n // PACK_BLOCK))
+    vp = np.empty(nb * PACK_BLOCK, dtype=np.int64)
+    vp[:n] = v
+    vp[n:] = v[n - 1] if n else 0          # pads are never addressable
+    blocks = vp.reshape(nb, PACK_BLOCK)
+    base = blocks.min(axis=1)
+    d = blocks - base[:, None]
+    width = _bit_length(d.max(axis=1))
+    block_sorted = (np.diff(blocks, axis=1) >= 0).all(axis=1)
+    l = np.maximum(width - 7, 0)           # EF high parts then fit 256 bits
+    use_ef = ((codec == "ef") & block_sorted
+              & (EF_BITMAP_WORDS + 4 * l < 4 * width))
+    wfield = np.where(use_ef, l, width)
+    nwords = np.where(use_ef, EF_BITMAP_WORDS + 4 * l, 4 * width)
+    wordoff = np.concatenate([[0], np.cumsum(nwords)[:-1]])
+    total = int(nwords.sum())
+
+    # blocks are uint64-aligned (every payload is an even word count), so
+    # one sequential BitWriter produces the whole stream
+    bw = BitWriter()
+    for b in range(nb):
+        if use_ef[b]:
+            start = bw.n_bits()
+            bw.unary_many(np.diff(d[b] >> int(l[b]), prepend=np.int64(0)))
+            bw.pad_to(start + EF_BITMAP_WORDS * 32)
+            bw.write_many(d[b] & ((1 << int(l[b])) - 1), int(l[b]))
+        elif width[b] > 0:
+            bw.write_many(d[b], int(width[b]))
+    assert bw.n_bits() == total * 32
+    w64 = np.zeros(max(total + 1, 2) // 2, dtype=_U64)
+    got = bw.array()[: len(w64)]
+    w64[: len(got)] = got
+    words32 = np.empty(max(total, 1), dtype=np.uint32)
+    words32[0::2] = (w64 & _U64(0xFFFFFFFF)).astype(np.uint32)[: len(words32[0::2])]
+    words32[1::2] = (w64 >> _U64(32)).astype(np.uint32)[: len(words32[1::2])]
+
+    meta = wfield | (use_ef.astype(np.int64) << _META_EF_BIT)
+    return PackedPostings(
+        words=jnp.asarray(words32.view(np.int32)),
+        base=jnp.asarray(base.astype(np.int32)),
+        meta=jnp.asarray(meta.astype(np.int32)),
+        wordoff=jnp.asarray(wordoff.astype(np.int32)),
+        n_post=n, codec=codec)
+
+
+def unpack_postings(pk: PackedPostings) -> np.ndarray:
+    """Host reference decode of the full stream -> int32[n_post]."""
+    words = np.asarray(pk.words).view(np.uint32)
+    base = np.asarray(pk.base, dtype=np.int64)
+    meta = np.asarray(pk.meta)
+    wordoff = np.asarray(pk.wordoff, dtype=np.int64)
+    nb = len(base)
+    out = np.empty(nb * PACK_BLOCK, dtype=np.int64)
+    for b in range(nb):
+        w = int(meta[b]) & ((1 << _META_EF_BIT) - 1)
+        is_ef = (int(meta[b]) >> _META_EF_BIT) & 1
+        nw = (EF_BITMAP_WORDS + 4 * w) if is_ef else 4 * w
+        seg = words[wordoff[b] : wordoff[b] + nw].astype(_U64)
+        w64 = seg[0::2] | (seg[1::2] << _U64(32))
+        if nw == 0:
+            d = np.zeros(PACK_BLOCK, dtype=np.int64)
+        elif is_ef:
+            r = BitReader(w64)
+            high = np.cumsum(r.unary_many(PACK_BLOCK))
+            r.pos = EF_BITMAP_WORDS * 32
+            d = (high << w) | r.read_many(PACK_BLOCK, w)
+        else:
+            d = BitReader(w64).read_many(PACK_BLOCK, w)
+        out[b * PACK_BLOCK : (b + 1) * PACK_BLOCK] = base[b] + d
+    return out[: pk.n_post].astype(np.int32)
+
+
+def _popcount32(x):
+    """SWAR popcount on int32 lanes (no population_count primitive needed;
+    the wraparound multiply is well-defined two's-complement)."""
+    srl = lax.shift_right_logical
+    x = x - (srl(x, 1) & 0x55555555)
+    x = (x & 0x33333333) + (srl(x, 2) & 0x33333333)
+    x = (x + srl(x, 4)) & 0x0F0F0F0F
+    return srl(x * 0x01010101, 24)
+
+
+def packed_lookup(words, base, meta, wordoff, ptr, *, n_post: int, ef: bool):
+    """Random-access decode: postings[min(max(ptr, 0), n_post-1)].
+
+    Pure shift/mask jnp over flat int32 arrays — the shared transcription
+    (like ``rmq_window_batch``): the Pallas kernels call this very function
+    on their VMEM-resident arrays and the XLA reference calls it on device
+    arrays, so both routes are bit-identical by construction.  The clamp
+    matches the raw path's ``postings[min(ptr, n_post-1)]`` gather contract
+    (callers mask out-of-list lanes themselves).
+
+    ``ef=False`` (static) promises no block has an EF payload and skips the
+    8 bitmap gathers + select; with ``ef=True`` the per-block meta flag
+    picks bitmap-select or plain bitpack decode lane-wise.
+    """
+    srl = lax.shift_right_logical
+    W = words.shape[0]
+    p = jnp.minimum(jnp.maximum(ptr, 0), max(n_post - 1, 0)).astype(jnp.int32)
+    b = srl(p, 7)                      # // PACK_BLOCK
+    j = p & (PACK_BLOCK - 1)
+    bb = base[b]
+    mm = meta[b]
+    off = wordoff[b]
+    wf = mm & ((1 << _META_EF_BIT) - 1)
+    is_ef = srl(mm, _META_EF_BIT) & 1
+    # fixed-width field j of the low/bitpack payload
+    bit = j * wf
+    wi = (off + (is_ef << 3)) + srl(bit, 5)
+    bo = bit & 31
+    w0 = words[jnp.minimum(wi, W - 1)]
+    w1 = words[jnp.minimum(wi + 1, W - 1)]
+    straddle = jnp.where(bo == 0, 0, w1 << ((32 - bo) & 31))
+    mask = jnp.where(wf == 0, 0, srl(jnp.int32(-1), 32 - jnp.maximum(wf, 1)))
+    low = (srl(w0, bo) | straddle) & mask
+    if not ef:
+        return (bb + low).astype(jnp.int32)
+    # EF upper bits: select the j-th set bit of the 8-word bitmap.  For
+    # bitpack blocks these gathers read (clamped) garbage that the final
+    # ``where`` discards.
+    r = j
+    sel_word = jnp.zeros_like(j)
+    sel_base = jnp.zeros_like(j)
+    found = jnp.zeros_like(j, dtype=bool)
+    for t in range(EF_BITMAP_WORDS):
+        wt = words[jnp.minimum(off + t, W - 1)]
+        c = _popcount32(wt)
+        here = (~found) & (r < c)
+        sel_word = jnp.where(here, wt, sel_word)
+        sel_base = jnp.where(here, t << 5, sel_base)
+        r = jnp.where(found | here, r, r - c)
+        found = found | here
+    # binary strip: position of the r-th set bit inside sel_word
+    pos = jnp.zeros_like(j)
+    cur = sel_word
+    for s in (16, 8, 4, 2, 1):
+        c = _popcount32(cur & ((1 << s) - 1))
+        go = c <= r
+        r = jnp.where(go, r - c, r)
+        pos = pos + jnp.where(go, s, 0)
+        cur = jnp.where(go, srl(cur, s), cur & ((1 << s) - 1))
+    high = sel_base + pos - j
+    val = jnp.where(is_ef == 1, (high << wf) | low, low)
+    return (bb + val).astype(jnp.int32)

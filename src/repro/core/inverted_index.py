@@ -1,10 +1,13 @@
 """The inverted index (paper §3.2) in CSR form + the ``minimal`` array.
 
 Lists are docid-ascending == score-descending (the paper's invariant), so
-"first k" == "top-k". NextGeq is a ranged binary search; the compressed
-(Elias-Fano) representation for the Table-4 study lives in ``elias_fano.py``.
-The `minimal` array (first docid of every list) feeds the single-term RMQ
-algorithm (paper §3.3).
+"first k" == "top-k". NextGeq is a ranged binary search. The `minimal`
+array (first docid of every list) feeds the single-term RMQ algorithm
+(paper §3.3). ``packed`` optionally carries the same postings in the
+device block format (``codecs.PackedPostings``) so the fused kernels can
+decode on-chip — the raw CSR arrays stay authoritative (XLA/off-TPU
+reference); the two are interchangeable by the
+``unpack_postings(packed) == postings`` contract the builder asserts.
 """
 from __future__ import annotations
 
@@ -14,6 +17,7 @@ import jax.numpy as jnp
 
 from .types import INF_DOCID, pytree_dataclass
 from .searching import ranged_searchsorted, next_geq
+from .codecs import PackedPostings, pack_postings, unpack_postings
 from .rmq import RangeMin
 
 
@@ -24,10 +28,16 @@ class InvertedIndex:
     minimal: jnp.ndarray     # int32[V+2] first docid per list (INF if empty)
     n_terms: int
     n_postings: int
+    packed: PackedPostings | None = None   # device block format (optional)
 
     @staticmethod
-    def build(term_rows: np.ndarray, docid_of_row: np.ndarray, n_terms: int):
-        """term_rows int32[N, M] (1-based ids, 0 pad); docid_of_row int32[N]."""
+    def build(term_rows: np.ndarray, docid_of_row: np.ndarray, n_terms: int,
+              postings_codec: str | None = "ef"):
+        """term_rows int32[N, M] (1-based ids, 0 pad); docid_of_row int32[N].
+
+        ``postings_codec``: "ef" (default) or "bitpack" additionally emits
+        the compressed device layout into ``.packed``; None skips it.
+        """
         term_rows = np.asarray(term_rows, dtype=np.int64)
         n, m = term_rows.shape
         docs = np.broadcast_to(np.asarray(docid_of_row, dtype=np.int64)[:, None], (n, m))
@@ -50,12 +60,18 @@ class InvertedIndex:
         ends = offsets[1:]
         nonempty = ends > starts
         minimal[:-1][nonempty] = d[starts[nonempty]]
+        packed = None
+        if postings_codec is not None:
+            packed = pack_postings(d.astype(np.int32), postings_codec)
+            got = unpack_postings(packed)
+            assert (got == d).all(), "packed postings round-trip broke"
         return InvertedIndex(
             postings=jnp.asarray(d.astype(np.int32)),
             offsets=jnp.asarray(offsets),
             minimal=jnp.asarray(minimal),
             n_terms=n_terms,
             n_postings=len(d),
+            packed=packed,
         )
 
     # -- primitives -----------------------------------------------------------

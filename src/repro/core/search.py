@@ -275,18 +275,56 @@ def complete_conjunctive(index, completions, rmq_minimal,
 # (tests/test_batched_engines.py).
 # ==========================================================================
 # VMEM ceiling for the heap_topk kernel: the engine's source arrays (RMQ
-# values + sparse table + ib windows as int32, offsets, postings) stay
-# resident for the whole launch, so they must fit on-chip with headroom for
-# the heap scratch. Larger corpora keep the per-pop batched-RMQ path.
-HEAP_KERNEL_MAX_BYTES = 12 << 20
+# values + sparse table + ib windows as int32, offsets, and raw OR
+# compressed postings) stay resident for the whole launch, so they must fit
+# on-chip with headroom for the heap scratch. The ceiling is platform-
+# resolved (``compat.default_heap_kernel_max_bytes``, 12 MiB today) and
+# caller-overridable (``QACArch.heap_kernel_max_bytes``). Larger corpora
+# keep the per-pop batched-RMQ path — unless the compressed postings
+# layout (``postings_codec``) shrinks them back under the gate.
 
 
-def _heap_kernel_fits(index: InvertedIndex, rmq_minimal: RangeMin) -> bool:
-    """Static (shape-level) VMEM-fit check for the heap_topk kernel."""
+def _heap_kernel_fits(index: InvertedIndex, rmq_minimal: RangeMin, *,
+                      packed=None, max_bytes: int | None = None) -> bool:
+    """Static (shape-level) VMEM-fit check for the heap_topk kernel.
+
+    ``packed`` counts the compressed postings bytes (word stream + block
+    directory) instead of raw CSR int32 — the whole point of ISSUE 7: the
+    3-5x postings compression becomes a 3-5x larger kernel-eligible corpus.
+    """
+    if max_bytes is None:
+        from ..compat import default_heap_kernel_max_bytes
+
+        max_bytes = default_heap_kernel_max_bytes()
     b = 4 * (rmq_minimal.values.size + rmq_minimal.st_pos.size
              + rmq_minimal.ib.size          # ib is widened to int32 in-kernel
-             + index.offsets.size + index.postings.size)
-    return b <= HEAP_KERNEL_MAX_BYTES
+             + index.offsets.size)
+    b += packed.nbytes() if packed is not None else 4 * index.postings.size
+    return b <= max_bytes
+
+
+def _resolve_packed(index: InvertedIndex, postings_codec: str | None):
+    """Map the ``postings_codec`` knob to the index's PackedPostings.
+
+    None/"auto" -> packed if the index carries one (routing still prefers
+    raw when raw fits); "raw" -> never; "ef"/"bitpack" -> the index's
+    packed postings, which must exist and match the requested codec.
+    """
+    codec = "auto" if postings_codec is None else postings_codec
+    if codec == "raw":
+        return None
+    packed = getattr(index, "packed", None)
+    if packed is None:
+        if codec == "auto":
+            return None
+        raise ValueError(
+            f"postings_codec={codec!r} but the index has no packed postings "
+            f"(build it with postings_codec={codec!r})")
+    if codec != "auto" and packed.codec != codec:
+        raise ValueError(
+            f"postings_codec={codec!r} but the index was packed as "
+            f"{packed.codec!r}")
+    return packed
 
 
 def single_term_topk_bounded_batch(index: InvertedIndex,
@@ -294,11 +332,13 @@ def single_term_topk_bounded_batch(index: InvertedIndex,
                                    k: int, trips: int, *,
                                    use_kernel: bool = False,
                                    interpret: bool | None = None,
-                                   heap_kernel: bool | None = None):
+                                   heap_kernel: bool | None = None,
+                                   postings_codec: str | None = None,
+                                   heap_kernel_max_bytes: int | None = None):
     """Batch-native ``single_term_topk_bounded``: term_lo/hi int32[B].
 
     Returns (out int32[B, k], done bool[B]), bit-identical to vmap of the
-    per-query engine. Kernel routing (ROADMAP PR 3): ``use_kernel=True``
+    per-query engine. Kernel routing (ROADMAP PR 3 + 7): ``use_kernel=True``
     first tries the fused heap_topk kernel — the WHOLE trip loop in one
     Pallas launch with the heap state in VMEM scratch — whenever the
     engine's source arrays statically fit on-chip; otherwise each pop's RMQ
@@ -307,11 +347,36 @@ def single_term_topk_bounded_batch(index: InvertedIndex,
     whose ops layer still honors ``use_kernel`` for its Pallas-vs-XLA
     choice). The default XLA path is the in-block-window gather formulation
     of ``RangeMin.query_batch``.
+
+    ``postings_codec`` picks the kernel's postings representation:
+    None/"auto" keeps raw CSR when it fits the VMEM gate and falls back to
+    the index's compressed layout (``index.packed``) when only that fits;
+    "raw" pins raw; "ef"/"bitpack" pin the compressed layout (in-kernel
+    ``codecs.packed_lookup`` decode — bit-identical either way). The
+    per-pop fallback path always reads raw CSR (it lives in HBM there; no
+    VMEM gate to win back). ``heap_kernel_max_bytes`` overrides the
+    platform ceiling (None = ``compat.default_heap_kernel_max_bytes``).
     """
     trips = min(trips, 2 * k)
     bad = term_lo >= term_hi
+    packed = _resolve_packed(index, postings_codec)
+    explicit = postings_codec not in (None, "auto", "raw")
     if heap_kernel is None:
-        heap_kernel = use_kernel and _heap_kernel_fits(index, rmq_minimal)
+        heap_kernel = False
+        if use_kernel:
+            fit_raw = _heap_kernel_fits(index, rmq_minimal,
+                                        max_bytes=heap_kernel_max_bytes)
+            fit_pk = packed is not None and _heap_kernel_fits(
+                index, rmq_minimal, packed=packed,
+                max_bytes=heap_kernel_max_bytes)
+            if explicit:          # caller pinned the codec: packed or bust
+                heap_kernel = fit_pk
+            elif fit_raw:         # auto: raw wins when it fits (no decode)
+                heap_kernel, packed = True, None
+            elif fit_pk:          # auto: compression extends the gate
+                heap_kernel = True
+    elif heap_kernel and not explicit:
+        packed = None             # forced kernel route defaults to raw
     if heap_kernel:
         from ..kernels.heap_topk.ops import heap_topk
 
@@ -319,7 +384,7 @@ def single_term_topk_bounded_batch(index: InvertedIndex,
             rmq_minimal.values, rmq_minimal.st_pos, rmq_minimal.ib,
             index.offsets, index.postings, term_lo, term_hi,
             k=k, trips=trips, n=rmq_minimal.n, n_terms=index.n_terms,
-            use_kernel=use_kernel, interpret=interpret)
+            use_kernel=use_kernel, interpret=interpret, packed=packed)
     else:
         # same engine loop, one pop at a time (the ONE copy lives in
         # kernels/heap_topk/ref.py); the rmq_fn hook lets each pop's 2B-lane
@@ -341,13 +406,15 @@ def single_term_topk_batch(index: InvertedIndex, rmq_minimal: RangeMin,
                            term_lo, term_hi, k: int, *,
                            use_kernel: bool = False,
                            interpret: bool | None = None,
-                           heap_kernel: bool | None = None):
+                           heap_kernel: bool | None = None,
+                           postings_codec: str | None = None,
+                           heap_kernel_max_bytes: int | None = None):
     """Batch-native ``single_term_topk`` (full 2k-trip budget, always exact)."""
-    out, _ = single_term_topk_bounded_batch(index, rmq_minimal, term_lo,
-                                            term_hi, k, 2 * k,
-                                            use_kernel=use_kernel,
-                                            interpret=interpret,
-                                            heap_kernel=heap_kernel)
+    out, _ = single_term_topk_bounded_batch(
+        index, rmq_minimal, term_lo, term_hi, k, 2 * k,
+        use_kernel=use_kernel, interpret=interpret, heap_kernel=heap_kernel,
+        postings_codec=postings_codec,
+        heap_kernel_max_bytes=heap_kernel_max_bytes)
     return out
 
 
@@ -365,7 +432,8 @@ def conjunctive_multi_batch(index: InvertedIndex, completions, prefix_ids,
                             *, tile: int = 128, max_tiles: int = 4096,
                             use_kernel: bool = False,
                             interpret: bool | None = None,
-                            list_pad: int = 8192, probe_iters: int = 0):
+                            list_pad: int = 8192, probe_iters: int = 0,
+                            postings_codec: str | None = None):
     """Batch-native ``conjunctive_multi``: prefix_ids int32[B, PMAX], the
     rest int32[B]. Bit-identical to vmap of the per-query engine.
 
@@ -387,6 +455,14 @@ def conjunctive_multi_batch(index: InvertedIndex, completions, prefix_ids,
     binary-search depth — callers that host-verify the longest probe list
     (serve/frontend.py) pass ``log2(list_pad)+1`` instead of the global
     ``log2(n_postings)+1`` bound; 0 keeps the global bound.
+
+    ``postings_codec`` (kernel path only): "ef"/"bitpack" switch the probes
+    to ``kernels.intersect.ops.conjunctive_scan_packed`` — no [B, P, L]
+    probe-list gather at all; the kernel pins the compressed postings index
+    in VMEM and binary-searches each [start, end) span with in-kernel
+    decode. The fit condition becomes the packed index bytes (the caller
+    verifies it on the host, like list_pad), and ``list_pad`` no longer
+    truncates. Bit-identical to the raw probes.
     """
     B, PMAX = prefix_ids.shape
     rows = jnp.arange(B)
@@ -402,7 +478,18 @@ def conjunctive_multi_batch(index: InvertedIndex, completions, prefix_ids,
     lane = jnp.arange(tile, dtype=jnp.int32)
     need = valid_t & (jnp.arange(PMAX)[None, :] != driver[:, None])  # [B, PMAX]
 
-    if use_kernel:
+    packed = _resolve_packed(index, postings_codec) if (
+        use_kernel and postings_codec not in (None, "auto", "raw")) else None
+    if use_kernel and packed is not None:
+        from ..kernels.intersect.ops import conjunctive_scan_packed
+
+        # compressed probe route: per-slot [start, end) spans instead of
+        # gathered list tiles; start == end marks unused/empty slots and an
+        # empty-but-needed list still kills its lane outright
+        k_starts = jnp.where(need, starts, 0).astype(jnp.int32)
+        k_ends = jnp.where(need, ends, 0).astype(jnp.int32)
+        lane_dead = jnp.any(need & (ends == starts), axis=1)       # [B]
+    elif use_kernel:
         from ..kernels.intersect.ops import conjunctive_scan
 
         assert list_pad & (list_pad - 1) == 0, "list_pad must be a power of two"
@@ -432,7 +519,14 @@ def conjunctive_multi_batch(index: InvertedIndex, completions, prefix_ids,
         idx = jnp.minimum(base[:, None] + lane[None, :], n_post - 1)
         cand = index.postings[idx]                                  # [B, T]
         in_list = (base[:, None] + lane[None, :]) < d_end[:, None]
-        if use_kernel:
+        if use_kernel and packed is not None:
+            mask = conjunctive_scan_packed(
+                jnp.where(in_list, cand, INF_DOCID), k_starts, k_ends,
+                _extract_rows(completions, cand), term_lo, term_hi, packed,
+                use_kernel=True, interpret=interpret,
+                probe_iters=probe_iters)
+            hits = mask & in_list & ~lane_dead[:, None]
+        elif use_kernel:
             mask = conjunctive_scan(
                 jnp.where(in_list, cand, INF_DOCID), lists, k_lens,
                 _extract_rows(completions, cand), term_lo, term_hi,
@@ -479,7 +573,10 @@ def complete_conjunctive_batch(index, completions, rmq_minimal,
                                prefix_ids, prefix_len, term_lo, term_hi,
                                k: int, *, use_kernel: bool = False,
                                interpret: bool | None = None,
-                               heap_kernel: bool | None = None, **kw):
+                               heap_kernel: bool | None = None,
+                               postings_codec: str | None = None,
+                               heap_kernel_max_bytes: int | None = None,
+                               **kw):
     """Batch-native fused Complete(): both engines + branchless select.
 
     The fallback for call sites that cannot partition by query class (the
@@ -513,9 +610,10 @@ def complete_conjunctive_batch(index, completions, rmq_minimal,
         lambda: absent)
     single = lax.cond(
         jnp.any(~is_multi),
-        lambda: single_term_topk_batch(index, rmq_minimal, term_lo, term_hi,
-                                       k, use_kernel=use_kernel,
-                                       interpret=interpret,
-                                       heap_kernel=heap_kernel),
+        lambda: single_term_topk_batch(
+            index, rmq_minimal, term_lo, term_hi, k, use_kernel=use_kernel,
+            interpret=interpret, heap_kernel=heap_kernel,
+            postings_codec=postings_codec,
+            heap_kernel_max_bytes=heap_kernel_max_bytes),
         lambda: absent)
     return jnp.where(is_multi[:, None], multi, single)

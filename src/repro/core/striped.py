@@ -15,11 +15,12 @@ import jax.numpy as jnp
 from .types import INF_DOCID, pytree_dataclass
 from .rmq import RangeMin, BLOCK
 from .inverted_index import InvertedIndex
+from .codecs import PackedPostings, pack_postings
 
 
 @pytree_dataclass(meta_fields=("n_stripes", "n_terms", "n_local_docs",
                                "postings_pad", "max_terms", "rmq_levels",
-                               "rmq_blocks"))
+                               "rmq_blocks", "pp_codec"))
 class StripedQACIndex:
     postings: jnp.ndarray      # int32[S, P_pad] global docids, ascending
     offsets: jnp.ndarray       # int32[S, V+2]
@@ -36,6 +37,15 @@ class StripedQACIndex:
     max_terms: int
     rmq_levels: int
     rmq_blocks: int
+    # compressed postings, stacked per stripe (ISSUE 7). Every stripe packs
+    # its PADDED postings row (common n_post == postings_pad), so the block
+    # directory shapes agree across stripes and only the word stream needs
+    # zero-padding to a common length. pp_codec None <=> fields absent.
+    pp_words: jnp.ndarray | None = None    # int32[S, W_pad]
+    pp_base: jnp.ndarray | None = None     # int32[S, NB]
+    pp_meta: jnp.ndarray | None = None     # int32[S, NB]
+    pp_wordoff: jnp.ndarray | None = None  # int32[S, NB]
+    pp_codec: str | None = None
 
 
 class LocalFwd:
@@ -55,8 +65,14 @@ class LocalFwd:
 
 
 def build_striped(term_rows: np.ndarray, docid_of_row: np.ndarray,
-                  n_terms: int, n_stripes: int) -> StripedQACIndex:
-    """Host-side: split the corpus into docid stripes and stack."""
+                  n_terms: int, n_stripes: int,
+                  postings_codec: str | None = "ef") -> StripedQACIndex:
+    """Host-side: split the corpus into docid stripes and stack.
+
+    ``postings_codec`` ("ef" default / "bitpack" / None) additionally packs
+    each stripe's padded postings row into the compressed device layout so
+    the shard_map body can route the heap kernel through in-kernel decode.
+    """
     term_rows = np.asarray(term_rows, np.int32)
     docid_of_row = np.asarray(docid_of_row, np.int32)
     n, m = term_rows.shape
@@ -64,7 +80,10 @@ def build_striped(term_rows: np.ndarray, docid_of_row: np.ndarray,
     posts, offs, mins, fwds, fnts, rvals, rsts, ribs = [], [], [], [], [], [], [], []
     for s in range(n_stripes):
         keep = (docid_of_row % n_stripes) == s
-        sub_idx = InvertedIndex.build(term_rows[keep], docid_of_row[keep], n_terms)
+        # stripe packing happens below on the PADDED rows (common shapes);
+        # skip the sub-index's own packing pass
+        sub_idx = InvertedIndex.build(term_rows[keep], docid_of_row[keep],
+                                      n_terms, postings_codec=None)
         posts.append(np.asarray(sub_idx.postings))
         offs.append(np.asarray(sub_idx.offsets))
         mins.append(np.asarray(sub_idx.minimal))
@@ -82,6 +101,24 @@ def build_striped(term_rows: np.ndarray, docid_of_row: np.ndarray,
         rsts.append((np.asarray(rm.st_pos), rm.levels, rm.n_blocks))
     p_pad = max(len(p) for p in posts)
     posts = [np.pad(p, (0, p_pad - len(p)), constant_values=INF_DOCID) for p in posts]
+    pk_fields = {}
+    if postings_codec is not None:
+        # pack the PADDED rows: a shared n_post (== p_pad) keeps n_blocks —
+        # and hence packed_lookup's static shapes — identical on every
+        # stripe, which shard_map requires. INF pads compress to width-0
+        # runs past the first transition block, so the overhead is tiny.
+        pks = [pack_postings(p, codec=postings_codec) for p in posts]
+        w_pad = max(int(pk.words.shape[0]) for pk in pks)
+        pk_fields = dict(
+            pp_words=jnp.asarray(np.stack(
+                [np.pad(np.asarray(pk.words), (0, w_pad - pk.words.shape[0]))
+                 for pk in pks])),
+            pp_base=jnp.asarray(np.stack([np.asarray(pk.base) for pk in pks])),
+            pp_meta=jnp.asarray(np.stack([np.asarray(pk.meta) for pk in pks])),
+            pp_wordoff=jnp.asarray(np.stack(
+                [np.asarray(pk.wordoff) for pk in pks])),
+            pp_codec=postings_codec,
+        )
     levels = max(st[1] for st in rsts)
     nb = max(st[2] for st in rsts)
     sts = []
@@ -104,33 +141,53 @@ def build_striped(term_rows: np.ndarray, docid_of_row: np.ndarray,
         max_terms=m,
         rmq_levels=levels,
         rmq_blocks=nb,
+        **pk_fields,
     )
 
 
-def local_heap_kernel_fits(striped: StripedQACIndex) -> bool:
+def local_heap_kernel_fits(striped: StripedQACIndex, *,
+                           use_packed: bool = False,
+                           max_bytes: int | None = None) -> bool:
     """Host-side preview of the heap_topk routing for one stripe.
 
     The single-term engine routes its whole trip loop to the fused heap
     kernel only when the stripe-local RMQ tables + index arrays statically
     fit VMEM (``core.search._heap_kernel_fits``); this mirrors that check on
     the stacked arrays so launchers/benches can report which route the
-    shard_map body will take without tracing it.
+    shard_map body will take without tracing it. ``use_packed=True``
+    evaluates the fit on the compressed postings bytes (ISSUE 7) and
+    ``max_bytes`` overrides the default VMEM ceiling — together they preview
+    the raw-vs-compressed crossover per stripe.
     """
     from .search import _heap_kernel_fits
 
     idx, _, rmq = local_index(
         jax.tree_util.tree_map(lambda a: a[:1], striped))
-    return _heap_kernel_fits(idx, rmq)
+    packed = idx.packed if use_packed else None
+    if use_packed and packed is None:
+        return False
+    return _heap_kernel_fits(idx, rmq, packed=packed, max_bytes=max_bytes)
 
 
 def local_index(striped: StripedQACIndex):
     """Inside shard_map (leading stripe dim == 1): reconstruct local views."""
+    packed = None
+    if striped.pp_words is not None:
+        packed = PackedPostings(
+            words=striped.pp_words[0],
+            base=striped.pp_base[0],
+            meta=striped.pp_meta[0],
+            wordoff=striped.pp_wordoff[0],
+            n_post=striped.postings_pad,
+            codec=striped.pp_codec,
+        )
     idx = InvertedIndex(
         postings=striped.postings[0],
         offsets=striped.offsets[0],
         minimal=striped.minimal[0],
         n_terms=striped.n_terms,
         n_postings=striped.postings_pad,
+        packed=packed,
     )
     fwd = LocalFwd(striped.fwd_terms[0], striped.fwd_nterms[0], striped.n_stripes)
     rmq = RangeMin(

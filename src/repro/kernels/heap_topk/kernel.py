@@ -29,9 +29,21 @@ Blocks (per program):
   st_pos   (levels, nb_pad) sparse-table argmin positions (row-padded)
   ib       (IB_LEVELS, n_pad) in-block window argmin offsets (int32)
   offsets  (1, v_pad)       inverted-index list boundaries
-  postings (1, p_pad)       concatenated docid lists (INF padded)
+  postings (1, p_pad)       concatenated docid lists (INF padded) — raw route
+  … or the compressed directory (ISSUE 7), replacing ``postings``:
+  pwords   (1, w_pad)       PackedPostings.words   (int32 payload stream)
+  pbase    (1, nb2_pad)     PackedPostings.base
+  pmeta    (1, nb2_pad)     PackedPostings.meta    (width | is_ef<<6)
+  pwoff    (1, nb2_pad)     PackedPostings.wordoff
   out      (bt, k)          emitted docids, ascending, INF padded
   done     (bt, 1)          1 iff k emitted or heap exhausted
+
+The compressed route swaps the two postings gathers per trip for
+``codecs.packed_lookup`` — block-directory lookup + shift/mask unpack (and
+bitmap-select for EF blocks) on the VMEM-resident word stream. Same
+function body as the XLA reference, so the route stays bit-identical; what
+it buys is the VMEM-fit gate now counting compressed bytes
+(``core.search._heap_kernel_fits``), enlarging the kernel-eligible corpus.
 """
 from __future__ import annotations
 
@@ -43,15 +55,27 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...core.codecs import packed_lookup
 from .ref import rmq_window_batch
 
 INF = 2**31 - 1
 BLOCK = 128
 
 
-def _kernel(tlh_ref, values_ref, st_ref, ib_ref, off_ref, post_ref,
-            out_ref, done_ref, kind_s, lo_s, hi_s, pos_s, val_s,
-            *, k, trips, n, levels, n_blocks, n_terms, n_post):
+def _kernel(tlh_ref, values_ref, st_ref, ib_ref, off_ref, *rest,
+            k, trips, n, levels, n_blocks, n_terms, n_post, packed_ef):
+    if packed_ef is None:
+        (post_ref, out_ref, done_ref,
+         kind_s, lo_s, hi_s, pos_s, val_s) = rest
+        postings = post_ref[...].reshape(-1)
+        lookup = lambda ptrs: postings[jnp.minimum(ptrs, n_post - 1)]
+    else:
+        (pw_ref, pb_ref, pm_ref, po_ref, out_ref, done_ref,
+         kind_s, lo_s, hi_s, pos_s, val_s) = rest
+        lookup = functools.partial(
+            packed_lookup, pw_ref[...].reshape(-1), pb_ref[...].reshape(-1),
+            pm_ref[...].reshape(-1), po_ref[...].reshape(-1),
+            n_post=n_post, ef=packed_ef)
     bt, cap = kind_s.shape
     n_pad = values_ref.shape[1]
     nb_pad = st_ref.shape[1]
@@ -59,7 +83,6 @@ def _kernel(tlh_ref, values_ref, st_ref, ib_ref, off_ref, post_ref,
     ib_flat = ib_ref[...].reshape(-1)
     st_flat = st_ref[...].reshape(-1)
     offsets = off_ref[...].reshape(-1)
-    postings = post_ref[...].reshape(-1)
     rmq = functools.partial(rmq_window_batch, values, ib_flat, st_flat,
                             n=n, levels=levels, n_blocks=n_blocks,
                             nb_stride=nb_pad, n_pad=n_pad)
@@ -116,9 +139,8 @@ def _kernel(tlh_ref, values_ref, st_ref, ib_ref, off_ref, post_ref,
         it_start, it_end, adv_end = offs3[:bt], offs3[bt:2 * bt], offs3[2 * bt:]
         it_ptr = it_start + 1                # minimal was postings[start]
         adv_ptr = tstar + 1                  # iterator pop: ptr + 1
-        # ---- postings gather: instantiated + advanced iterator values ----
-        pv = postings[jnp.concatenate([jnp.minimum(it_ptr, n_post - 1),
-                                       jnp.minimum(adv_ptr, n_post - 1)])]
+        # ---- postings gather/decode: instantiated + advanced iterators ----
+        pv = lookup(jnp.concatenate([it_ptr, adv_ptr]))
         it_val = jnp.where((it_ptr < it_end) & found & is_range,
                            pv[:bt], INF)
         adv_val = jnp.where((adv_ptr < adv_end) & found & (~is_range),
@@ -163,11 +185,18 @@ def _kernel(tlh_ref, values_ref, st_ref, ib_ref, off_ref, post_ref,
 
 def heap_topk_kernel(tlh, values, st_pos, ib, offsets, postings, *,
                      k: int, trips: int, n: int, n_terms: int, n_post: int,
-                     block_b: int = 128, interpret: bool | None = None):
+                     block_b: int = 128, interpret: bool | None = None,
+                     packed: tuple | None = None,
+                     packed_ef: bool = False):
     """tlh int32[B, 2] = (term_lo, term_hi - 1); the index/RMQ arrays are
     2-D, 128-lane padded (see ops.py). Returns (out int32[B, k],
     done int32[B, 1]). ``interpret=None`` resolves platform-aware (real
-    lowering on TPU, interpreter elsewhere)."""
+    lowering on TPU, interpreter elsewhere).
+
+    ``packed`` = (words, base, meta, wordoff) — all 2-D lane-padded —
+    replaces the raw ``postings`` input with the compressed directory
+    (``postings`` is then ignored); ``packed_ef`` is the static
+    ``PackedPostings.has_ef`` flag (skips bitmap-select when False)."""
     if interpret is None:
         from ...compat import pallas_interpret_default
 
@@ -179,9 +208,15 @@ def heap_topk_kernel(tlh, values, st_pos, ib, offsets, postings, *,
     assert B % bt == 0
     cap = 2 * trips + 1
     n_blocks = n_pad // BLOCK
+    if packed is None:
+        post_in = [postings]
+        pe = None
+    else:
+        post_in = list(packed)
+        pe = bool(packed_ef)
     kernel = functools.partial(_kernel, k=k, trips=trips, n=n, levels=levels,
                                n_blocks=n_blocks, n_terms=n_terms,
-                               n_post=n_post)
+                               n_post=n_post, packed_ef=pe)
     return pl.pallas_call(
         kernel,
         grid=(B // bt,),
@@ -191,8 +226,7 @@ def heap_topk_kernel(tlh, values, st_pos, ib, offsets, postings, *,
             pl.BlockSpec((levels, nb_pad), lambda i: (0, 0)),
             pl.BlockSpec(ib.shape, lambda i: (0, 0)),
             pl.BlockSpec(offsets.shape, lambda i: (0, 0)),
-            pl.BlockSpec(postings.shape, lambda i: (0, 0)),
-        ],
+        ] + [pl.BlockSpec(p.shape, lambda i: (0, 0)) for p in post_in],
         out_specs=[
             pl.BlockSpec((bt, k), lambda i: (i, 0)),
             pl.BlockSpec((bt, 1), lambda i: (i, 0)),
@@ -203,4 +237,4 @@ def heap_topk_kernel(tlh, values, st_pos, ib, offsets, postings, *,
         ],
         scratch_shapes=[pltpu.VMEM((bt, cap), jnp.int32) for _ in range(5)],
         interpret=interpret,
-    )(tlh, values, st_pos, ib, offsets, postings)
+    )(tlh, values, st_pos, ib, offsets, *post_in)

@@ -33,7 +33,7 @@ def _pad_lanes(a, mult=BLOCK, fill=0):
 def heap_topk(values, st_pos, ib, offsets, postings, term_lo, term_hi, *,
               k: int, trips: int, n: int, n_terms: int,
               use_kernel: bool = True, interpret: bool | None = None,
-              block_b: int = 128):
+              block_b: int = 128, packed=None):
     """Bounded-trip single-term top-k -> (out int32[B, k], done bool[B]).
 
     values/st_pos/ib: the ``RangeMin`` arrays over the ``minimal`` array
@@ -41,15 +41,22 @@ def heap_topk(values, st_pos, ib, offsets, postings, term_lo, term_hi, *,
     ranges [term_lo, term_hi) per lane. ``done`` is True iff k docids were
     emitted or the heap is exhausted — the caller ORs in its bad-range and
     full-budget conditions. ``interpret=None`` resolves platform-aware.
+
+    ``packed`` (``codecs.PackedPostings``, a pytree arg whose n_post/codec
+    metadata are static) selects the compressed route: the kernel keeps the
+    word stream + block directory in VMEM instead of raw postings and
+    decodes per gather (its ref fallback decodes identically) —
+    bit-identical to the raw route for any index where
+    ``unpack_postings(packed) == postings``.
     """
     if interpret is None:
         interpret = pallas_interpret_default()
     if not use_kernel or n == 0:
         return heap_topk_ref(values, st_pos, ib, offsets, postings,
                              term_lo, term_hi, k=k, trips=trips, n=n,
-                             n_terms=n_terms)
+                             n_terms=n_terms, packed=packed)
     B = term_lo.shape[0]
-    n_post = postings.shape[0]
+    n_post = postings.shape[0] if packed is None else packed.n_post
     bt = min(block_b, B)
     pad = (-B) % bt
     tl = term_lo.astype(jnp.int32)
@@ -62,13 +69,22 @@ def heap_topk(values, st_pos, ib, offsets, postings, term_lo, term_hi, *,
     st_p = st_pos
     if nb % BLOCK:  # lane-pad columns; flat gathers use the padded stride
         st_p = jnp.pad(st_pos, ((0, 0), (0, (-nb) % BLOCK)))
+    if packed is None:
+        post_in = _pad_lanes(postings, fill=2**31 - 1)
+        pk_in, pk_ef = None, False
+    else:
+        # zero pads are dead: lookups clamp the block id to the real NB
+        post_in = None
+        pk_in = (_pad_lanes(packed.words), _pad_lanes(packed.base),
+                 _pad_lanes(packed.meta), _pad_lanes(packed.wordoff))
+        pk_ef = packed.has_ef
     out, done = heap_topk_kernel(
         tlh,
         values.reshape(1, -1),
         st_p,
         ib.astype(jnp.int32),
         _pad_lanes(offsets),
-        _pad_lanes(postings, fill=2**31 - 1),
+        post_in,
         k=k, trips=trips, n=n, n_terms=n_terms, n_post=n_post,
-        block_b=bt, interpret=interpret)
+        block_b=bt, interpret=interpret, packed=pk_in, packed_ef=pk_ef)
     return out[:B], done[:B, 0].astype(jnp.bool_)

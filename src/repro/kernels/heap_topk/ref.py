@@ -21,6 +21,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax import lax
 
+from ...core.codecs import packed_lookup
 from ..rmq.ref import rmq_window_batch  # noqa: F401  (re-export: kernel.py)
 
 INF = 2**31 - 1
@@ -34,19 +35,29 @@ def _rmq_batch_ref(values, ib, st_pos, n, p, q):
 
 
 def heap_topk_ref(values, st_pos, ib, offsets, postings, term_lo, term_hi,
-                  *, k: int, trips: int, n: int, n_terms: int, rmq_fn=None):
+                  *, k: int, trips: int, n: int, n_terms: int, rmq_fn=None,
+                  packed=None):
     """The batched bounded-trip engine on raw arrays -> (out, done).
 
     ``rmq_fn(p, q) -> (pos, val)`` overrides the split-subrange RMQ (same
     contract as ``RangeMin.query_batch``); None uses the in-module XLA
-    window formulation.
+    window formulation. ``packed`` (a ``codecs.PackedPostings``) swaps the
+    raw postings gathers for ``codecs.packed_lookup`` decode — the XLA
+    formulation of the compressed kernel route, bit-identical to raw
+    because ``packed_lookup(ptr) == postings[min(ptr, n_post-1)]``.
     """
     if rmq_fn is None:
         rmq_fn = lambda p, q: _rmq_batch_ref(values, ib, st_pos, n, p, q)
+    if packed is not None:
+        lookup = lambda ptrs: packed_lookup(
+            packed.words, packed.base, packed.meta, packed.wordoff, ptrs,
+            n_post=packed.n_post, ef=packed.has_ef)
+    else:
+        lookup = lambda ptrs: postings[
+            jnp.minimum(ptrs, postings.shape[0] - 1)]
     B = term_lo.shape[0]
     rows = jnp.arange(B)
     cap = 2 * trips + 1
-    n_post = postings.shape[0]
     hi_incl = term_hi - 1
     pos0, val0 = rmq_fn(term_lo, hi_incl)
     kind = jnp.zeros((B, cap), jnp.int32)
@@ -86,8 +97,7 @@ def heap_topk_ref(values, st_pos, ib, offsets, postings, term_lo, term_hi,
         it_start, it_end, adv_end = offs[:B], offs[B:2 * B], offs[2 * B:]
         it_ptr = it_start + 1
         adv_ptr = tstar + 1
-        pv = postings[jnp.concatenate([
-            jnp.minimum(it_ptr, n_post - 1), jnp.minimum(adv_ptr, n_post - 1)])]
+        pv = lookup(jnp.concatenate([it_ptr, adv_ptr]))
         it_val = jnp.where((it_ptr < it_end) & found & is_range,
                            pv[:B], INF)
         adv_val = jnp.where((adv_ptr < adv_end) & found & (~is_range),

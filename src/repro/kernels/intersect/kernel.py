@@ -16,6 +16,15 @@ Grid: one program per batch row. Blocks (per program):
 
 VMEM budget: T*4 + P*L*4 + T*M*4 bytes; with T=256, P=7, L=8192, M=8 that is
 ~242 KiB — well inside the ~16 MiB/core VMEM of v5e.
+
+The packed variant (ISSUE 7) replaces the per-row (1, P, L) probe-list
+gather with the WHOLE compressed postings index pinned to grid block 0
+(words + block directory, ``codecs.PackedPostings``): each lane
+binary-searches its [start, end) span directly in the compressed stream,
+decoding probes with ``codecs.packed_lookup``. No per-tile HBM gather of
+probe lists, no ``list_pad`` truncation — the fit condition becomes the
+packed index bytes instead of P·L, which is what lets long-tail lists
+(the ones ``list_pad`` would have excluded) take the kernel route.
 """
 from __future__ import annotations
 
@@ -24,6 +33,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ...core.codecs import packed_lookup
 
 INF = 2**31 - 1
 
@@ -57,6 +68,70 @@ def _kernel(cands_ref, lists_ref, lens_ref, fwd_ref, bounds_ref, out_ref,
     fwd_ok = jnp.any((rows >= tlo) & (rows < thi), axis=1)
     ok = member & fwd_ok & (cands != INF)
     out_ref[0, :] = ok.astype(jnp.int32)
+
+
+def _kernel_packed(cands_ref, starts_ref, ends_ref, fwd_ref, bounds_ref,
+                   pw_ref, pb_ref, pm_ref, po_ref, out_ref,
+                   *, iters: int, n_post: int, packed_ef: bool):
+    cands = cands_ref[0, :]                      # [T]
+    T = cands.shape[0]
+    P = starts_ref.shape[1]
+    lookup = functools.partial(
+        packed_lookup, pw_ref[...].reshape(-1), pb_ref[...].reshape(-1),
+        pm_ref[...].reshape(-1), po_ref[...].reshape(-1),
+        n_post=n_post, ef=packed_ef)
+    member = jnp.ones((T,), jnp.bool_)
+    for p in range(P):                           # static: few prefix terms
+        s = starts_ref[0, p]
+        e = ends_ref[0, p]
+        # the same valid-guarded halving loop as core.searching's
+        # ranged_searchsorted (side="left"), probing the compressed stream;
+        # surplus iterations are no-ops, so any iters >= log2(span)+1 gives
+        # the identical insertion point
+        lo = jnp.full((T,), s, jnp.int32)
+        hi = jnp.full((T,), e, jnp.int32)
+        for _ in range(iters):
+            mid = (lo + hi) // 2
+            v = lookup(mid)
+            go = v < cands
+            valid = lo < hi
+            lo = jnp.where(valid & go, mid + 1, lo)
+            hi = jnp.where(valid & ~go, mid, hi)
+        hit = (lo < e) & (lookup(lo) == cands)
+        member &= jnp.where(e > s, hit, True)    # s == e: slot unused/empty
+    tlo = bounds_ref[0, 0]
+    thi = bounds_ref[0, 1]
+    rows = fwd_ref[0, :, :]                      # [T, M]
+    fwd_ok = jnp.any((rows >= tlo) & (rows < thi), axis=1)
+    ok = member & fwd_ok & (cands != INF)
+    out_ref[0, :] = ok.astype(jnp.int32)
+
+
+def conjunctive_scan_packed_kernel(cands, starts, ends, fwd_rows, bounds,
+                                   packed_arrays, *, iters: int, n_post: int,
+                                   packed_ef: bool, interpret: bool = True):
+    """cands int32[B,T]; starts/ends int32[B,P] (start==end => skip slot);
+    fwd_rows int32[B,T,M]; bounds int32[B,2]; packed_arrays = 2-D
+    lane-padded (words, base, meta, wordoff) -> int32[B,T] mask."""
+    B, T = cands.shape
+    P = starts.shape[1]
+    M = fwd_rows.shape[2]
+    kernel = functools.partial(_kernel_packed, iters=iters, n_post=n_post,
+                               packed_ef=packed_ef)
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, T), lambda b: (b, 0)),
+            pl.BlockSpec((1, P), lambda b: (b, 0)),
+            pl.BlockSpec((1, P), lambda b: (b, 0)),
+            pl.BlockSpec((1, T, M), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, 2), lambda b: (b, 0)),
+        ] + [pl.BlockSpec(a.shape, lambda b: (0, 0)) for a in packed_arrays],
+        out_specs=pl.BlockSpec((1, T), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T), jnp.int32),
+        interpret=interpret,
+    )(cands, starts, ends, fwd_rows, bounds, *packed_arrays)
 
 
 def conjunctive_scan_kernel(cands, lists, lens, fwd_rows, bounds,

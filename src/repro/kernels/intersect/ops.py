@@ -1,4 +1,4 @@
-"""Public jit'd wrapper for the fused conjunctive scan."""
+"""Public jit'd wrappers for the fused conjunctive scan (raw + packed)."""
 from __future__ import annotations
 
 import functools
@@ -7,8 +7,18 @@ import jax
 import jax.numpy as jnp
 
 from ...compat import pallas_interpret_default
-from .kernel import conjunctive_scan_kernel
-from .ref import conjunctive_scan_ref
+from .kernel import conjunctive_scan_kernel, conjunctive_scan_packed_kernel
+from .ref import conjunctive_scan_ref, conjunctive_scan_packed_ref
+
+_LANE = 128
+
+
+def _pad_lanes(a, fill=0):
+    """Pad a 1-D array to a lane multiple (VMEM-friendly 2-D reshape)."""
+    pad = (-a.shape[0]) % _LANE
+    if pad:
+        a = jnp.pad(a, (0, pad), constant_values=fill)
+    return a.reshape(1, -1)
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
@@ -28,4 +38,38 @@ def conjunctive_scan(cands, lists, lens, fwd_rows, term_lo, term_hi,
     bounds = jnp.stack([term_lo, term_hi], axis=1).astype(jnp.int32)
     mask = conjunctive_scan_kernel(cands, lists, lens, fwd_rows, bounds,
                                    interpret=interpret)
+    return mask.astype(jnp.bool_)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret",
+                                             "probe_iters"))
+def conjunctive_scan_packed(cands, starts, ends, fwd_rows, term_lo, term_hi,
+                            packed, *, use_kernel: bool = True,
+                            interpret: bool | None = None,
+                            probe_iters: int = 0):
+    """bool[B, T] conjunctive hits, probing the compressed postings stream.
+
+    ``packed`` is a ``codecs.PackedPostings`` (n_post/codec static);
+    starts/ends int32[B, P] are each slot's postings span, with
+    start == end marking unused/empty slots (the caller masks
+    needed-but-empty lanes itself, exactly like the raw kernel route).
+    ``probe_iters=0`` uses the global log2(n_post)+1 bound — callers that
+    host-verify a tighter span bound may pass fewer. Bit-identical to the
+    raw probes because ``packed_lookup(ptr) == postings[ptr]`` on every
+    in-bounds pointer.
+    """
+    if interpret is None:
+        interpret = pallas_interpret_default()
+    iters = probe_iters or min(31, max(1, packed.n_post.bit_length()))
+    if not use_kernel:
+        return conjunctive_scan_packed_ref(cands, starts, ends, fwd_rows,
+                                           term_lo, term_hi, packed,
+                                           iters=iters)
+    bounds = jnp.stack([term_lo, term_hi], axis=1).astype(jnp.int32)
+    pk = (_pad_lanes(packed.words), _pad_lanes(packed.base),
+          _pad_lanes(packed.meta), _pad_lanes(packed.wordoff))
+    mask = conjunctive_scan_packed_kernel(
+        cands, starts.astype(jnp.int32), ends.astype(jnp.int32), fwd_rows,
+        bounds, pk, iters=iters, n_post=packed.n_post,
+        packed_ef=packed.has_ef, interpret=interpret)
     return mask.astype(jnp.bool_)

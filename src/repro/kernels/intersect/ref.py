@@ -11,10 +11,17 @@ Inputs (per query row; all padded, batch-leading):
 
 Output: bool[B, T] — candidate passes the intersection AND the forward
 suffix-range check.
+The packed variant probes the compressed postings stream directly
+(per-lane [start, end) spans + ``codecs.packed_lookup`` decode) instead of
+pre-gathered [B, P, L] list tiles — same output contract.
 """
 from __future__ import annotations
 
+import functools
+
 import jax.numpy as jnp
+
+from ...core.codecs import packed_lookup
 
 INF = 2**31 - 1
 
@@ -38,5 +45,41 @@ def conjunctive_scan_ref(cands, lists, lens, fwd_rows, term_lo, term_hi):
     member = jnp.all(present | ~used, axis=1)             # [B, T]
     in_range = (fwd_rows >= term_lo[:, None, None]) & (fwd_rows < term_hi[:, None, None])
     fwd_ok = jnp.any(in_range, axis=2)                    # [B, T]
+    valid = cands != INF
+    return member & fwd_ok & valid
+
+
+def conjunctive_scan_packed_ref(cands, starts, ends, fwd_rows, term_lo,
+                                term_hi, packed, *, iters: int):
+    """Batched oracle of the packed probe kernel (same loop, [B, T] lanes).
+
+    starts/ends int32[B, P] are per-slot postings spans; start == end marks
+    an unused or empty slot (skipped — the caller's lane_dead mask handles
+    needed-but-empty). ``iters`` >= log2(longest span)+1; surplus
+    iterations are no-ops (valid-guarded halving), matching
+    ``core.searching.ranged_searchsorted`` exactly.
+    """
+    B, T = cands.shape
+    P = starts.shape[1]
+    lookup = functools.partial(
+        packed_lookup, packed.words, packed.base, packed.meta,
+        packed.wordoff, n_post=packed.n_post, ef=packed.has_ef)
+    member = jnp.ones((B, T), jnp.bool_)
+    for p in range(P):
+        s = starts[:, p:p + 1]                            # [B, 1]
+        e = ends[:, p:p + 1]
+        lo = jnp.broadcast_to(s, (B, T)).astype(jnp.int32)
+        hi = jnp.broadcast_to(e, (B, T)).astype(jnp.int32)
+        for _ in range(iters):
+            mid = (lo + hi) // 2
+            v = lookup(ptr=mid)
+            go = v < cands
+            valid = lo < hi
+            lo = jnp.where(valid & go, mid + 1, lo)
+            hi = jnp.where(valid & ~go, mid, hi)
+        hit = (lo < e) & (lookup(ptr=lo) == cands)
+        member &= jnp.where(e > s, hit, True)
+    in_range = (fwd_rows >= term_lo[:, None, None]) & (fwd_rows < term_hi[:, None, None])
+    fwd_ok = jnp.any(in_range, axis=2)
     valid = cands != INF
     return member & fwd_ok & valid

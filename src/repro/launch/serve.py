@@ -156,11 +156,17 @@ def main():
         d_of_row[order] = np.arange(len(rows), dtype=np.int32)
         striped = build_striped(rows, d_of_row, dictionary.n_terms, args.stripes)
         from repro.core.striped import local_heap_kernel_fits
-        route = ("heap_topk kernel" if local_heap_kernel_fits(striped)
+        fit_raw = local_heap_kernel_fits(striped)
+        fit_pk = local_heap_kernel_fits(striped, use_packed=True)
+        route = ("heap_topk kernel" if (fit_raw or fit_pk)
                  else "per-pop batched RMQ kernel")
         if jax.default_backend() != "tpu":
             route += " on TPU; per-pop XLA query_batch on this backend"
         print(f"[serve] single-term route per stripe: {route}")
+        print(f"[serve] heap-kernel VMEM fit per stripe: "
+              f"raw CSR {'fits' if fit_raw else 'DOES NOT fit'}, "
+              f"compressed ({striped.pp_codec or 'none'}) "
+              f"{'fits' if fit_pk else 'DOES NOT fit'}")
         fn = jax.jit(lambda a, b, c, d: qac_serve_striped(
             striped, qidx.dictionary, a, b, c, d, k=args.k))
     else:

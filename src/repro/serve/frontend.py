@@ -68,13 +68,26 @@ class QACFrontend:
                  trips: int | None = None, use_kernel: bool | None = None,
                  interpret: bool | None = None,
                  heap_kernel: bool | None = None,
-                 specialize_list_pad: bool = True):
+                 specialize_list_pad: bool = True,
+                 postings_codec: str | None = None,
+                 heap_kernel_max_bytes: int | None = None):
         self.qidx = qidx
         self.k = k
         self.tile = tile
         self.max_tiles = max_tiles
         self.min_bucket = min_bucket
         self.trips = trips
+        # postings device layout for the kernel routes (ISSUE 7):
+        # None/"auto" = raw CSR preferred, compressed when only it fits the
+        # heap-kernel VMEM ceiling; "ef"/"bitpack" force in-kernel decode.
+        # An explicit codec also switches the multi-term intersect kernel to
+        # the compressed probe route, which needs NO probe-list pad bound —
+        # the packed index itself is the (static) VMEM footprint.
+        self.postings_codec = postings_codec
+        self.heap_kernel_max_bytes = heap_kernel_max_bytes
+        self._explicit_packed = (
+            postings_codec not in (None, "auto", "raw")
+            and getattr(qidx.index, "packed", None) is not None)
         # per-bucket list_pad specialization (PR 3) mints one jit variant per
         # pow2 of the longest list a sub-batch probes — the right trade for
         # big offline batches, but ONLINE micro-batches are small and varied,
@@ -131,23 +144,33 @@ class QACFrontend:
                     out, done = serve_single_term(
                         self.qidx, suf, slen, k=k, trips=self.trips,
                         use_kernel=self.use_kernel, interpret=self.interpret,
-                        heap_kernel=self.heap_kernel)
+                        heap_kernel=self.heap_kernel,
+                        postings_codec=self.postings_codec,
+                        heap_kernel_max_bytes=self.heap_kernel_max_bytes)
                     return out, jnp.all(done)   # scalar: one tiny host sync
 
                 fn = jax.jit(_single)
             elif engine == "single_full":
                 fn = jax.jit(lambda suf, slen: serve_single_term_full(
                     self.qidx, suf, slen, k=k, use_kernel=self.use_kernel,
-                    interpret=self.interpret, heap_kernel=self.heap_kernel))
+                    interpret=self.interpret, heap_kernel=self.heap_kernel,
+                    postings_codec=self.postings_codec,
+                    heap_kernel_max_bytes=self.heap_kernel_max_bytes))
             elif engine == "multi":
-                use_k = (self.use_kernel and list_pad <= MAX_LIST_PAD
-                         and bucket * MAX_TERMS * list_pad * 4
-                         <= MAX_MULTI_KERNEL_BYTES)
+                # the compressed probe route replaces the [B, P, L] gather
+                # with the whole packed index, so the list_pad/HBM gates
+                # don't apply to it
+                use_k = self.use_kernel and (
+                    self._explicit_packed
+                    or (list_pad <= MAX_LIST_PAD
+                        and bucket * MAX_TERMS * list_pad * 4
+                        <= MAX_MULTI_KERNEL_BYTES))
                 fn = jax.jit(lambda pids, plen, suf, slen: serve_multi_term(
                     self.qidx, pids, plen, suf, slen, k=k, tile=self.tile,
                     max_tiles=self.max_tiles, use_kernel=use_k,
                     interpret=self.interpret, list_pad=list_pad,
-                    probe_iters=list_pad.bit_length()))
+                    probe_iters=list_pad.bit_length(),
+                    postings_codec=self.postings_codec))
             else:
                 raise ValueError(engine)
             self._cache[key] = fn

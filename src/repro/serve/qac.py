@@ -38,13 +38,20 @@ def qac_serve_step(qidx: QACIndex, prefix_ids, prefix_len, suffix_chars,
                    suffix_len, *, k: int = 10, tile: int = 128,
                    max_tiles: int = 4096, use_kernel: bool | None = None,
                    interpret: bool | None = None,
-                   heap_kernel: bool | None = None):
+                   heap_kernel: bool | None = None,
+                   postings_codec: str | None = None,
+                   heap_kernel_max_bytes: int | None = None):
     """Fused single-index batched serve: -> docids int32[B, k] (INF padded).
 
     Every lane pays for BOTH engines (branchless select). This is the
     reference/fallback path; class-partitioned traffic should go through
     ``serve.frontend.QACFrontend``, which dispatches each class to only its
     engine via ``serve_single_term`` / ``serve_multi_term`` below.
+
+    ``postings_codec`` (ISSUE 7) selects the postings device layout for the
+    kernel routes — None/"auto" prefers raw CSR when it fits the
+    ``heap_kernel_max_bytes`` VMEM gate and falls back to the compressed
+    stream; "ef"/"bitpack" force the in-kernel decode route.
     """
     use_kernel = default_use_kernel() if use_kernel is None else use_kernel
     term_lo, term_hi = qidx.dictionary.locate_prefix(suffix_chars, suffix_len)
@@ -52,7 +59,9 @@ def qac_serve_step(qidx: QACIndex, prefix_ids, prefix_len, suffix_chars,
         qidx.index, qidx.completions, qidx.rmq_minimal,
         prefix_ids, prefix_len, term_lo, term_hi, k,
         tile=tile, max_tiles=max_tiles, use_kernel=use_kernel,
-        interpret=interpret, heap_kernel=heap_kernel)
+        interpret=interpret, heap_kernel=heap_kernel,
+        postings_codec=postings_codec,
+        heap_kernel_max_bytes=heap_kernel_max_bytes)
 
 
 def qac_serve_step_vmap(qidx: QACIndex, prefix_ids, prefix_len, suffix_chars,
@@ -74,22 +83,27 @@ def serve_single_term(qidx: QACIndex, suffix_chars, suffix_len, *, k: int = 10,
                       trips: int | None = None,
                       use_kernel: bool | None = None,
                       interpret: bool | None = None,
-                      heap_kernel: bool | None = None):
+                      heap_kernel: bool | None = None,
+                      postings_codec: str | None = None,
+                      heap_kernel_max_bytes: int | None = None):
     """Batched single-term serve (paper §3.3) -> (docids int32[B, k], done).
 
     For a batch known to be 100% single-term (empty prefix). ``trips`` bounds
     the heap pops per lane (default k + 2 covers everything but pathological
     duplicate runs); ``done[b]`` is False where the budget was too small and
     the caller must fall back to the full 2k-trip engine for exact results.
+    ``postings_codec``/``heap_kernel_max_bytes`` tune the heap-kernel VMEM
+    routing (ISSUE 7): compressed postings decoded in-kernel when raw CSR
+    does not fit the ceiling, or forced with an explicit codec.
     """
     trips = (k + 2) if trips is None else trips
     use_kernel = default_use_kernel() if use_kernel is None else use_kernel
     term_lo, term_hi = qidx.dictionary.locate_prefix(suffix_chars, suffix_len)
-    return single_term_topk_bounded_batch(qidx.index, qidx.rmq_minimal,
-                                          term_lo, term_hi, k, trips,
-                                          use_kernel=use_kernel,
-                                          interpret=interpret,
-                                          heap_kernel=heap_kernel)
+    return single_term_topk_bounded_batch(
+        qidx.index, qidx.rmq_minimal, term_lo, term_hi, k, trips,
+        use_kernel=use_kernel, interpret=interpret, heap_kernel=heap_kernel,
+        postings_codec=postings_codec,
+        heap_kernel_max_bytes=heap_kernel_max_bytes)
 
 
 def serve_single_term_vmap(qidx: QACIndex, suffix_chars, suffix_len, *,
@@ -108,21 +122,25 @@ def serve_single_term_vmap(qidx: QACIndex, suffix_chars, suffix_len, *,
 def serve_single_term_full(qidx: QACIndex, suffix_chars, suffix_len, *,
                            k: int = 10, use_kernel: bool | None = None,
                            interpret: bool | None = None,
-                           heap_kernel: bool | None = None):
+                           heap_kernel: bool | None = None,
+                           postings_codec: str | None = None,
+                           heap_kernel_max_bytes: int | None = None):
     """Batched single-term serve, full 2k-trip budget (always exact)."""
     use_kernel = default_use_kernel() if use_kernel is None else use_kernel
     term_lo, term_hi = qidx.dictionary.locate_prefix(suffix_chars, suffix_len)
-    return single_term_topk_batch(qidx.index, qidx.rmq_minimal, term_lo,
-                                  term_hi, k, use_kernel=use_kernel,
-                                  interpret=interpret,
-                                  heap_kernel=heap_kernel)
+    return single_term_topk_batch(
+        qidx.index, qidx.rmq_minimal, term_lo, term_hi, k,
+        use_kernel=use_kernel, interpret=interpret, heap_kernel=heap_kernel,
+        postings_codec=postings_codec,
+        heap_kernel_max_bytes=heap_kernel_max_bytes)
 
 
 def serve_multi_term(qidx: QACIndex, prefix_ids, prefix_len, suffix_chars,
                      suffix_len, *, k: int = 10, tile: int = 128,
                      max_tiles: int = 4096, use_kernel: bool = False,
                      interpret: bool | None = None, list_pad: int = 8192,
-                     probe_iters: int = 0):
+                     probe_iters: int = 0,
+                     postings_codec: str | None = None):
     """Batched conjunctive serve (Fig 5 Fwd) for a 100%-multi-term batch.
 
     ``use_kernel`` here defaults to False (not platform-resolved): the
@@ -130,14 +148,18 @@ def serve_multi_term(qidx: QACIndex, prefix_ids, prefix_len, suffix_chars,
     every needed list fits in ``list_pad``, a bound the caller must verify
     on the host (``serve.frontend.QACFrontend`` does — and, having
     verified it, also passes the matching ``probe_iters`` binary-search
-    depth for the XLA probe path).
+    depth for the XLA probe path). With an explicit ``postings_codec``
+    ("ef"/"bitpack", ISSUE 7) the kernel instead probes the compressed
+    postings stream directly — no [B, P, L] list gather and no ``list_pad``
+    bound at all, so it needs no host-side length check.
     """
     term_lo, term_hi = qidx.dictionary.locate_prefix(suffix_chars, suffix_len)
     return conjunctive_multi_batch(qidx.index, qidx.completions, prefix_ids,
                                    prefix_len, term_lo, term_hi, k, tile=tile,
                                    max_tiles=max_tiles, use_kernel=use_kernel,
                                    interpret=interpret, list_pad=list_pad,
-                                   probe_iters=probe_iters)
+                                   probe_iters=probe_iters,
+                                   postings_codec=postings_codec)
 
 
 def serve_multi_term_vmap(qidx: QACIndex, prefix_ids, prefix_len,
@@ -156,12 +178,17 @@ def serve_multi_term_vmap(qidx: QACIndex, prefix_ids, prefix_len,
 def _local_serve(striped: StripedQACIndex, prefix_ids, prefix_len,
                  term_lo, term_hi, k: int, tile: int, max_tiles: int,
                  use_kernel: bool = False, interpret: bool | None = None,
-                 heap_kernel: bool | None = None):
+                 heap_kernel: bool | None = None,
+                 postings_codec: str | None = None,
+                 heap_kernel_max_bytes: int | None = None):
     """Runs on one stripe (inside shard_map): [B_loc, k] local top-k.
 
     Batch-native fused engines; ``use_kernel`` routes the per-pop RMQ
     through the Pallas kernel (the intersect kernel stays off here — no
     host-side probe-list bound is available inside shard_map).
+    ``postings_codec`` reaches the single-term heap route: when the stripe
+    carries packed postings (``build_striped`` codec) the heap kernel can
+    decode them in VMEM instead of raw CSR.
     """
     idx, fwd, rmq_min = local_index(striped)
     return complete_conjunctive_batch(idx, fwd, rmq_min, prefix_ids,
@@ -169,7 +196,9 @@ def _local_serve(striped: StripedQACIndex, prefix_ids, prefix_len,
                                       tile=tile, max_tiles=max_tiles,
                                       use_kernel=use_kernel,
                                       interpret=interpret,
-                                      heap_kernel=heap_kernel)
+                                      heap_kernel=heap_kernel,
+                                      postings_codec=postings_codec,
+                                      heap_kernel_max_bytes=heap_kernel_max_bytes)
 
 
 def qac_serve_striped(striped: StripedQACIndex, dictionary, prefix_ids,
@@ -177,7 +206,9 @@ def qac_serve_striped(striped: StripedQACIndex, dictionary, prefix_ids,
                       tile: int = 128, max_tiles: int = 4096, mesh=None,
                       merge: str = "gather", use_kernel: bool | None = None,
                       interpret: bool | None = None,
-                      heap_kernel: bool | None = None):
+                      heap_kernel: bool | None = None,
+                      postings_codec: str | None = None,
+                      heap_kernel_max_bytes: int | None = None):
     """Distributed serve over the (pod?, data, model) mesh.
 
     Returns global top-k docids int32[B, k]. Without a mesh, runs a loop over
@@ -200,7 +231,8 @@ def qac_serve_striped(striped: StripedQACIndex, dictionary, prefix_ids,
             sub = jax.tree_util.tree_map(lambda a: a[s : s + 1], striped)
             parts.append(_local_serve(sub, prefix_ids, prefix_len,
                                       term_lo, term_hi, k, tile, max_tiles,
-                                      use_kernel, interpret, heap_kernel))
+                                      use_kernel, interpret, heap_kernel,
+                                      postings_codec, heap_kernel_max_bytes))
         allk = jnp.concatenate(parts, axis=1)              # [B, S*k]
         return lax.top_k(-allk, k)[0] * -1
 
@@ -209,7 +241,8 @@ def qac_serve_striped(striped: StripedQACIndex, dictionary, prefix_ids,
 
     def local_fn(st, pids, plen, tl, th):
         local = _local_serve(st, pids, plen, tl, th, k, tile, max_tiles,
-                             use_kernel, interpret, heap_kernel)
+                             use_kernel, interpret, heap_kernel,
+                             postings_codec, heap_kernel_max_bytes)
         if merge == "butterfly":
             nsh = mesh.shape["model"]
             cur = local

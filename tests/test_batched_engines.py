@@ -213,6 +213,21 @@ def test_conjunctive_batch_kernel_dispatch(built):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def test_conjunctive_batch_packed_dispatch(built):
+    """postings_codec="ef" routes the kernel probes through the compressed
+    stream (no list gather, no list_pad bound) — bit-identical to the XLA
+    reference route (ISSUE 7)."""
+    qidx, _ = built
+    assert qidx.index.packed is not None
+    pids, plen, tl, th = _multi_inputs(built, 17, 16)
+    want = conjunctive_multi_batch(qidx.index, qidx.completions, pids, plen,
+                                   tl, th, 10)
+    got = conjunctive_multi_batch(qidx.index, qidx.completions, pids, plen,
+                                  tl, th, 10, use_kernel=True, interpret=True,
+                                  postings_codec="ef")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 # ---------------------------------------------------------------- striped
 def test_striped_local_serve_matches_vmap(built):
     """The stripe-local batched engines == vmap of the scalar fused engine

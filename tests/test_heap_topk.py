@@ -141,6 +141,78 @@ def test_engine_per_pop_route(built):
     np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
 
 
+# ---------------------------------------------------------- packed (ISSUE 7)
+@pytest.mark.parametrize("trips", [1, 3, 12, 20])
+def test_packed_ref_matches_vmap(built, trips):
+    """ref.py with the compressed stream: same decode transcription as the
+    kernel, bit-identical to the raw vmap reference."""
+    qidx, kept = built
+    assert qidx.index.packed is not None
+    tl, th = _ranges(qidx, kept, np.random.default_rng(200 + trips), 48)
+    wo, wd = _want(qidx, tl, th, 10, trips)
+    go, gd = _got(qidx, tl, th, 10, trips, use_kernel=False,
+                  packed=qidx.index.packed)
+    np.testing.assert_array_equal(go, np.asarray(wo))
+    np.testing.assert_array_equal(gd, np.asarray(wd))
+
+
+@pytest.mark.parametrize("codec", ["ef", "bitpack"])
+def test_packed_kernel_matches_vmap(built, codec):
+    """Pallas kernel (interpret) decoding ef/bitpack blocks in VMEM."""
+    from repro.core.codecs import pack_postings
+
+    qidx, kept = built
+    pk = (qidx.index.packed if codec == "ef"
+          else pack_postings(np.asarray(qidx.index.postings), codec))
+    tl, th = _ranges(qidx, kept, np.random.default_rng(300), 48)
+    for trips in (3, 12):
+        wo, wd = _want(qidx, tl, th, 10, trips)
+        go, gd = _got(qidx, tl, th, 10, trips, use_kernel=True,
+                      interpret=True, packed=pk)
+        np.testing.assert_array_equal(go, np.asarray(wo))
+        np.testing.assert_array_equal(gd, np.asarray(wd))
+
+
+def test_engine_packed_codec_route(built):
+    """single_term_topk_bounded_batch(postings_codec=...) — the explicit
+    compressed heap route AND the auto route where only compressed fits —
+    bit-identical to the default XLA route."""
+    from repro.core.search import _heap_kernel_fits
+
+    qidx, kept = built
+    idx, rm = qidx.index, qidx.rmq_minimal
+    tl, th = _ranges(qidx, kept, np.random.default_rng(79), 32)
+    wo, wd = single_term_topk_bounded_batch(idx, rm, tl, th, 10, 12)
+    for codec in ("ef", "auto", "raw"):
+        go, gd = single_term_topk_bounded_batch(
+            idx, rm, tl, th, 10, 12, use_kernel=True, heap_kernel=True,
+            interpret=True, postings_codec=codec)
+        np.testing.assert_array_equal(np.asarray(go), np.asarray(wo))
+        np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+    # a ceiling between the packed and raw footprints: auto must still route
+    # to the heap kernel (via the compressed stream), not per-pop
+    squeeze = _heap_kernel_fits(idx, rm, packed=idx.packed, max_bytes=0)
+    assert not squeeze
+    mb = (idx.packed.nbytes()
+          + 4 * (rm.values.size + rm.st_pos.size + rm.ib.size
+                 + idx.offsets.size))
+    assert _heap_kernel_fits(idx, rm, packed=idx.packed, max_bytes=mb)
+    assert not _heap_kernel_fits(idx, rm, max_bytes=mb)
+    go, gd = single_term_topk_bounded_batch(
+        idx, rm, tl, th, 10, 12, use_kernel=True, interpret=True,
+        postings_codec="auto", heap_kernel_max_bytes=mb)
+    np.testing.assert_array_equal(np.asarray(go), np.asarray(wo))
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+
+
+def test_engine_explicit_codec_requires_match(built):
+    qidx, _ = built
+    with pytest.raises(ValueError):
+        single_term_topk_bounded_batch(
+            qidx.index, qidx.rmq_minimal, jnp.asarray([1]), jnp.asarray([2]),
+            10, 12, use_kernel=True, postings_codec="bitpack")
+
+
 @given(st.integers(0, 2**31 - 2), st.sampled_from([1, 4, 9, 12, 17, 20]))
 @settings(max_examples=15, deadline=None)
 def test_heap_topk_property(built, seed, trips):
@@ -162,3 +234,7 @@ def test_heap_topk_property(built, seed, trips):
     ko, kd = _got(qidx, tl, th, 10, trips, use_kernel=True, interpret=True)
     np.testing.assert_array_equal(ko, np.asarray(wo))
     np.testing.assert_array_equal(kd, np.asarray(wd))
+    po, pd = _got(qidx, tl, th, 10, trips, use_kernel=False,
+                  packed=qidx.index.packed)
+    np.testing.assert_array_equal(po, np.asarray(wo))
+    np.testing.assert_array_equal(pd, np.asarray(wd))

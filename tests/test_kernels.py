@@ -4,8 +4,11 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels.intersect.ops import conjunctive_scan
-from repro.kernels.intersect.ref import conjunctive_scan_ref
+from repro.kernels.intersect.ops import (conjunctive_scan,
+                                         conjunctive_scan_packed)
+from repro.kernels.intersect.ref import (conjunctive_scan_ref,
+                                         conjunctive_scan_packed_ref)
+from repro.core.codecs import pack_postings
 from repro.kernels.rmq.ops import rmq_query
 from repro.kernels.flash_attention import flash_attention, flash_decode
 from repro.kernels.flash_attention.ref import flash_attention_ref
@@ -44,6 +47,75 @@ def test_intersect_kernel_matches_ref(B, T, P, L, M):
     args = _make_intersect_case(rng, B, T, P, L, M, universe=500)
     got = conjunctive_scan(*args, use_kernel=True, interpret=True)
     want = conjunctive_scan_ref(*args)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------- intersect (packed)
+def _make_packed_case(rng, B, T, P, n_lists, max_len, universe, codec):
+    """CSR postings + per-slot spans; raw probe-list tiles for the oracle."""
+    lists = [np.sort(rng.choice(universe, size=rng.integers(1, max_len),
+                                replace=False)).astype(np.int64)
+             for _ in range(n_lists)]
+    postings = np.concatenate(lists)
+    offs = np.concatenate([[0], np.cumsum([len(l) for l in lists])])
+    pk = pack_postings(postings, codec)
+
+    cands = np.sort(rng.choice(universe, (B, T)), axis=1).astype(np.int32)
+    starts = np.zeros((B, P), np.int32)
+    ends = np.zeros((B, P), np.int32)
+    L = 1 << max(1, (max_len - 1).bit_length())
+    raw_lists = np.full((B, P, L), INF, np.int32)
+    raw_lens = np.zeros((B, P), np.int32)
+    for b in range(B):
+        for p in range(P):
+            if rng.integers(0, 4) == 0:        # unused slot
+                continue
+            li = rng.integers(0, n_lists)
+            starts[b, p], ends[b, p] = offs[li], offs[li + 1]
+            raw_lens[b, p] = len(lists[li])
+            raw_lists[b, p, : len(lists[li])] = lists[li]
+            # seed overlap so some candidates are members
+            take = rng.integers(0, len(lists[li]), size=T // 4)
+            cands[b, rng.integers(0, T, size=T // 4)] = lists[li][take]
+        cands[b] = np.sort(cands[b])
+    M = 4
+    fwd = rng.integers(0, 50, (B, T, M)).astype(np.int32)
+    tlo = rng.integers(0, 40, B).astype(np.int32)
+    thi = (tlo + rng.integers(0, 15, B)).astype(np.int32)
+    j = lambda a: jnp.asarray(a)
+    packed_args = (j(cands), j(starts), j(ends), j(fwd), j(tlo), j(thi), pk)
+    raw_args = (j(cands), j(raw_lists), j(raw_lens), j(fwd), j(tlo), j(thi))
+    return packed_args, raw_args
+
+
+@pytest.mark.parametrize("codec", ["ef", "bitpack"])
+@pytest.mark.parametrize("B,T,P", [(2, 128, 2), (3, 256, 4)])
+def test_intersect_packed_kernel_matches_ref_and_raw(codec, B, T, P):
+    """Compressed probe route: Pallas kernel == packed ref == the RAW list
+    oracle on the same spans (the bit-identity contract of ISSUE 7)."""
+    rng = np.random.default_rng(B * 10 + T + (codec == "ef"))
+    packed_args, raw_args = _make_packed_case(
+        rng, B, T, P, n_lists=12, max_len=90, universe=4000, codec=codec)
+    got_k = conjunctive_scan_packed(*packed_args, use_kernel=True,
+                                    interpret=True)
+    got_r = conjunctive_scan_packed(*packed_args, use_kernel=False)
+    want = conjunctive_scan_ref(*raw_args)
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got_r), np.asarray(want))
+
+
+def test_intersect_packed_all_slots_unused():
+    """start == end everywhere: membership trivially true, only the forward
+    range + INF checks decide."""
+    rng = np.random.default_rng(5)
+    packed_args, raw_args = _make_packed_case(
+        rng, 2, 128, 3, n_lists=4, max_len=30, universe=300, codec="ef")
+    c, _, _, fwd, tlo, thi, pk = packed_args
+    z = jnp.zeros_like(packed_args[1])
+    got = conjunctive_scan_packed(c, z, z, fwd, tlo, thi, pk,
+                                  use_kernel=True, interpret=True)
+    want = conjunctive_scan_ref(raw_args[0], raw_args[1],
+                                jnp.zeros_like(raw_args[2]), fwd, tlo, thi)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 

@@ -54,6 +54,16 @@ def test_routed_equals_fused_mixed_batches(built):
         _check_parity(qidx, _mixed_batch(kept, rng, B, pct), fe)
 
 
+def test_routed_packed_codec_parity(built):
+    """Explicit postings_codec routes BOTH engines through the compressed
+    kernels (interpret off-TPU) — still bit-identical to the fused step."""
+    qidx, kept = built
+    fe = QACFrontend(qidx, k=10, use_kernel=True, interpret=True,
+                     heap_kernel=True, postings_codec="ef")
+    rng = np.random.default_rng(21)
+    _check_parity(qidx, _mixed_batch(kept, rng, 24, 50, pct_garbage=15), fe)
+
+
 def test_routed_single_class_batches(built):
     """Batches that exercise only one engine (the other is never dispatched)."""
     qidx, kept = built
