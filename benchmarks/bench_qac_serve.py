@@ -165,14 +165,23 @@ def main():
         postings_codec="ef")[0])
     np.testing.assert_array_equal(np.asarray(f_raw(suf, slen)),
                                   np.asarray(f_pk(suf, slen)))
-    t_pk = timer(lambda: f_pk(suf, slen).block_until_ready(), repeats=7)
+    # best-of-3 interleaved timings against a re-measured raw reading: the
+    # gate is a RATIO of two ~us-scale routes, and on a loaded runner a
+    # single mean reading of either side swings past the 1.5x margin
+    t_pk, t_raw = np.inf, np.inf
+    for _ in range(3):
+        t_pk = min(t_pk, timer(
+            lambda: f_pk(suf, slen).block_until_ready(), repeats=7))
+        t_raw = min(t_raw, timer(
+            lambda: f_raw(suf, slen).block_until_ready(), repeats=7))
+    t_raw = min(t_raw, kernel_t[B])
     emit(f"qac_single_engine_kernel_compressed_b{B}", t_pk / B * 1e6,
          f"qps={B/t_pk:.0f},route={kernel_route},"
-         f"vs_raw_kernel={t_pk/kernel_t[B]:.2f}x,"
+         f"vs_raw_kernel={t_pk/t_raw:.2f}x,"
          f"bpi={qidx.index.packed.bits_per_int():.2f}")
-    assert t_pk <= 1.5 * kernel_t[B], \
+    assert t_pk <= 1.5 * t_raw, \
         (f"compressed heap route {t_pk/B*1e6:.1f} us/q exceeds 1.5x the raw "
-         f"kernel route {kernel_t[B]/B*1e6:.1f} us/q at B={B}")
+         f"kernel route {t_raw/B*1e6:.1f} us/q at B={B}")
 
     # -- kernel-eligible corpus scale (ISSUE 7 payoff) -----------------------
     # the point of in-kernel decode: corpora whose raw CSR blows the VMEM

@@ -29,6 +29,7 @@ MODULES = [
     "bench_effectiveness",
     "bench_space",
     "bench_qac_serve",
+    "bench_qac_cluster",
     "bench_roofline",
 ]
 

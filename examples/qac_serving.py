@@ -6,7 +6,12 @@ build a ~20k-completion index, then serve keystroke traffic two ways —
     concurrent typing sessions flow through the deadline-aware
     micro-batching scheduler + prefix/session caches, and per-request
     latency (p50/p99) is compared against naive one-request-per-dispatch
-    serving with bit-identical results.
+    serving with bit-identical results;
+  part 3 (ISSUE 8): the CLUSTER — two runtime replicas behind a
+    session-affinity dispatcher take the same trace at overload with
+    admission control (SLA-class degrade/shed), then again with a replica
+    KILLED mid-trace: the death is detected, its traffic re-routed, and
+    every served answer stays bit-identical to the uncached oracle.
 
   PYTHONPATH=src python examples/qac_serving.py
 """
@@ -80,3 +85,61 @@ assert all(np.array_equal(g, w) for g, w in zip(rows, naive_rows))
 print(f"online: bit-identical to per-request dispatch; mean latency "
       f"{s['mean_us']:.0f}us vs naive {naive['mean_us']:.0f}us "
       f"({naive['mean_us']/max(s['mean_us'], 1e-9):.1f}x)")
+
+# -- part 3: overload + failover on the cluster (ISSUE 8) --------------------
+# Two replicas behind a rendezvous-hash session-affinity dispatcher. First,
+# the SAME request set compressed onto a 10x denser time axis (target_qps)
+# with the admission ladder armed: 75% of sessions are `interactive` (SLA
+# traffic, degraded to a smaller k before ever being shed), 25% `bulk`
+# (scrapers — first to lose multi-term service, first shed). Then a fault
+# drill: replica 0 is killed mid-trace; the heartbeat registry detects the
+# death, in-flight + queued work re-routes to the survivor (whose caches
+# never saw those sessions — answers must still be bit-identical), and the
+# replica is re-admitted once its fault window closes.
+from repro.runtime.fault import FaultInjector, ReplicaFault
+from repro.serve.cluster import (ClusterConfig, QACServingCluster,
+                                 assign_sla, check_cluster_parity)
+
+sla = assign_sla(reqs, bulk_fraction=0.25)
+base_qps = len(reqs) / (max(r.t_us for r in reqs) / 1e6)
+hot = generate_keystroke_trace(kept, KeystrokeTraceConfig(
+    n_sessions=48, mean_keystroke_ms=120.0, seed=2,
+    target_qps=10.0 * base_qps))
+hot_reqs = prepare_requests(qidx, hot, k=10)
+cl = QACServingCluster(
+    qidx,
+    ClusterConfig(n_replicas=2, degrade_pressure_us=15_000.0,
+                  shed_bulk_pressure_us=22_500.0, shed_pressure_us=30_000.0,
+                  degraded_k=4),
+    RuntimeConfig(max_batch=64, slack_us=2_000.0),
+    frontends=[rt.fe, rt.fe])           # complete() is pure: share the warm fe
+res = cl.replay(hot_reqs, assign_sla(hot_reqs, bulk_fraction=0.25))
+cs = cl.telemetry.snapshot()
+print(f"\ncluster: 2 replicas at {10*base_qps:.0f} qps offered — "
+      f"served={cs['served']} shed_rate={cs['shed_rate']:.2f} "
+      f"degrade_rate={cs['degrade_rate']:.2f}; interactive "
+      f"p99={cs['interactive_p99_us']/1e3:.1f}ms, bulk "
+      f"p99={cs['bulk_p99_us']/1e3:.1f}ms, sheds={dict(cs['shed'])}")
+n_ok = check_cluster_parity(rt.fe, hot_reqs, res)
+print(f"cluster: all {n_ok} served rows bit-identical to the uncached oracle")
+
+t_mid = sorted(r.t_us for r in reqs)[len(reqs) // 2]
+inj = FaultInjector([], replica_faults=[
+    ReplicaFault(0, t_mid, t_mid + 500_000.0)])   # killed for 500 ms
+cl_d = QACServingCluster(
+    qidx,
+    ClusterConfig(n_replicas=2, degrade_pressure_us=1e12,
+                  shed_bulk_pressure_us=1e12, shed_pressure_us=1e12,
+                  heartbeat_timeout_us=100_000.0),
+    RuntimeConfig(max_batch=64, slack_us=2_000.0),
+    frontends=[rt.fe, rt.fe], injector=inj)
+res_d = cl_d.replay(reqs, sla)
+ds = cl_d.telemetry.snapshot()
+served_d = sum(r.status == "ok" for r in res_d)
+assert check_cluster_parity(rt.fe, reqs, res_d) == served_d
+assert ds["rerouted"] > 0 and ds["deaths"]
+print(f"drill: replica 0 killed at t={t_mid/1e3:.0f}ms — detected at "
+      f"t={ds['deaths'][0][0]/1e3:.0f}ms, {ds['rerouted']} requests "
+      f"re-routed (failover p99={ds['failover_p99_us']/1e3:.1f}ms), "
+      f"{len(ds['readmissions'])} readmission(s); all {served_d} served "
+      f"answers bit-identical through the failover")

@@ -9,12 +9,18 @@
 #      `launch/serve.py --online --check` (micro-batch scheduler + prefix/
 #      session caches), asserting parity with naive per-request dispatch
 #      and a nonzero cache hit rate;
-#   3. tier-1 test suite (must collect all modules — zero ImportErrors);
-#   4. quick-mode serving benchmark (exercises the batch-native engines, the
+#   3. cluster fault drill: a 2-replica cluster trace with one injected
+#      kill mid-trace (`--cluster 2 --drill --check`), asserting every
+#      served answer stays bit-identical to the uncached frontend oracle,
+#      the death is detected, and re-routed traffic is nonzero;
+#   4. tier-1 test suite (must collect all modules — zero ImportErrors);
+#   5. quick-mode serving benchmark (exercises the batch-native engines, the
 #      heap_topk route B-sweep, the routed frontend, the fused fallback +
 #      its >=parity-vs-vmap acceptance assert, the online-runtime trace
 #      sweep with its >=30% hit-rate / >=2x-vs-naive gates, and the striped
-#      path end-to-end; writes the BENCH_qac.json snapshot).
+#      path end-to-end; writes the BENCH_qac.json snapshot);
+#   6. quick-mode cluster saturation bench (admission-control SLA gate at
+#      overload + kill-drill failover gate; merges into BENCH_qac.json).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -31,6 +37,14 @@ echo "== online-runtime smoke: scheduler + prefix-cache parity =="
 python -m repro.launch.serve --online --check --queries 3000 --sessions 64 \
     --slack-us 5000
 
+echo "== cluster fault drill: 2 replicas + injected kill =="
+# session-affinity cluster with a replica kill injected mid-trace; --check
+# asserts bit-parity of every served row vs the uncached frontend oracle,
+# a detected death + readmission, and nonzero re-routed traffic
+python -m repro.launch.serve --online --cluster 2 --drill --check \
+    --queries 800 --sessions 16 --keystroke-ms 5 --max-batch 8 \
+    --slack-us 2000
+
 echo "== tier-1: pytest =="
 python -m pytest -x -q --ignore=tests/test_codecs.py \
     --ignore=tests/test_heap_topk.py \
@@ -38,6 +52,9 @@ python -m pytest -x -q --ignore=tests/test_codecs.py \
 
 echo "== quick-mode serving benchmark (incl. heap_topk bench) =="
 BENCH_QUICK=1 python -m benchmarks.bench_qac_serve
+
+echo "== quick-mode cluster saturation + failover benchmark =="
+BENCH_QUICK=1 python -m benchmarks.bench_qac_cluster
 
 echo "bench json: $(pwd)/BENCH_qac.json"
 echo "check_seed: OK"

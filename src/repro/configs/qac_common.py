@@ -59,6 +59,19 @@ class QACArch:
     online_slack_us: float = 20_000.0
     online_cache_entries: int = 1 << 17
     online_session_entries: int = 1 << 17
+    # multi-replica serving cluster (serve/cluster.py): dispatcher + SLA
+    # admission control. The pressure ladder (degrade -> shed_bulk -> shed)
+    # is in estimated-wait microseconds; 50ms is the paper-motivated
+    # interactive SLA, so degrade kicks in at half of it and full shed at
+    # twice it. heartbeat_timeout trades detection latency against false
+    # deaths from long GC pauses.
+    cluster_replicas: int = 4
+    cluster_max_queue: int = 1024
+    cluster_degrade_pressure_us: float = 25_000.0
+    cluster_shed_bulk_pressure_us: float = 50_000.0
+    cluster_shed_pressure_us: float = 100_000.0
+    cluster_degraded_k: int = 4
+    cluster_heartbeat_timeout_us: float = 200_000.0
 
     family = "qac"
 
@@ -71,6 +84,22 @@ class QACArch:
             slack_us=self.online_slack_us,
             cache_entries=self.online_cache_entries,
             session_entries=self.online_session_entries,
+        )
+
+    def cluster_config(self, n_replicas: int | None = None):
+        """The arch's dispatcher/admission knobs as a ``ClusterConfig``;
+        ``n_replicas`` overrides the preset count (experiment sweeps)."""
+        from ..serve.cluster import ClusterConfig
+
+        return ClusterConfig(
+            n_replicas=(self.cluster_replicas if n_replicas is None
+                        else n_replicas),
+            max_queue=self.cluster_max_queue,
+            degrade_pressure_us=self.cluster_degrade_pressure_us,
+            shed_bulk_pressure_us=self.cluster_shed_bulk_pressure_us,
+            shed_pressure_us=self.cluster_shed_pressure_us,
+            degraded_k=self.cluster_degraded_k,
+            heartbeat_timeout_us=self.cluster_heartbeat_timeout_us,
         )
 
     def cells(self):

@@ -9,7 +9,6 @@ over the ``model`` mesh axis.
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from .types import INF_DOCID, pytree_dataclass
@@ -145,55 +144,63 @@ def build_striped(term_rows: np.ndarray, docid_of_row: np.ndarray,
     )
 
 
-def local_heap_kernel_fits(striped: StripedQACIndex, *,
+def local_heap_kernel_fits(striped: StripedQACIndex, *, s: int = 0,
                            use_packed: bool = False,
                            max_bytes: int | None = None) -> bool:
-    """Host-side preview of the heap_topk routing for one stripe.
+    """Host-side preview of the heap_topk routing for stripe ``s``.
 
     The single-term engine routes its whole trip loop to the fused heap
     kernel only when the stripe-local RMQ tables + index arrays statically
     fit VMEM (``core.search._heap_kernel_fits``); this mirrors that check on
     the stacked arrays so launchers/benches can report which route the
-    shard_map body will take without tracing it. ``use_packed=True``
-    evaluates the fit on the compressed postings bytes (ISSUE 7) and
-    ``max_bytes`` overrides the default VMEM ceiling — together they preview
-    the raw-vs-compressed crossover per stripe.
+    shard_map body will take without tracing it. All stripes share padded
+    shapes, so the answer is stripe-independent unless a caller probes a
+    specific one. ``use_packed=True`` evaluates the fit on the compressed
+    postings bytes (ISSUE 7) and ``max_bytes`` overrides the default VMEM
+    ceiling — together they preview the raw-vs-compressed crossover per
+    stripe.
     """
     from .search import _heap_kernel_fits
 
-    idx, _, rmq = local_index(
-        jax.tree_util.tree_map(lambda a: a[:1], striped))
+    idx, _, rmq = local_index(striped, s)
     packed = idx.packed if use_packed else None
     if use_packed and packed is None:
         return False
     return _heap_kernel_fits(idx, rmq, packed=packed, max_bytes=max_bytes)
 
 
-def local_index(striped: StripedQACIndex):
-    """Inside shard_map (leading stripe dim == 1): reconstruct local views."""
+def local_index(striped: StripedQACIndex, s: int = 0):
+    """Reconstruct stripe ``s``'s local (InvertedIndex, fwd, RangeMin) views.
+
+    Two callers, two values of ``s``: inside shard_map the leading stripe
+    dim is already split to length 1 and the default ``s=0`` reads the lone
+    local slice; HOST-side replica topologies (the serving cluster's
+    stripe-resident replicas — ``serve/cluster.py``) address any stripe of
+    the stacked index directly, one ``local_index(striped, s)`` per replica.
+    """
     packed = None
     if striped.pp_words is not None:
         packed = PackedPostings(
-            words=striped.pp_words[0],
-            base=striped.pp_base[0],
-            meta=striped.pp_meta[0],
-            wordoff=striped.pp_wordoff[0],
+            words=striped.pp_words[s],
+            base=striped.pp_base[s],
+            meta=striped.pp_meta[s],
+            wordoff=striped.pp_wordoff[s],
             n_post=striped.postings_pad,
             codec=striped.pp_codec,
         )
     idx = InvertedIndex(
-        postings=striped.postings[0],
-        offsets=striped.offsets[0],
-        minimal=striped.minimal[0],
+        postings=striped.postings[s],
+        offsets=striped.offsets[s],
+        minimal=striped.minimal[s],
         n_terms=striped.n_terms,
         n_postings=striped.postings_pad,
         packed=packed,
     )
-    fwd = LocalFwd(striped.fwd_terms[0], striped.fwd_nterms[0], striped.n_stripes)
+    fwd = LocalFwd(striped.fwd_terms[s], striped.fwd_nterms[s], striped.n_stripes)
     rmq = RangeMin(
-        values=striped.rmq_values[0],
-        st_pos=striped.rmq_st[0],
-        ib=striped.rmq_ib[0],
+        values=striped.rmq_values[s],
+        st_pos=striped.rmq_st[s],
+        ib=striped.rmq_ib[s],
         n=striped.minimal.shape[-1],
         n_blocks=striped.rmq_blocks,
         levels=striped.rmq_levels,

@@ -12,6 +12,16 @@ against naive one-request-per-dispatch serving and a nonzero hit rate
 
   PYTHONPATH=src python -m repro.launch.serve --online --queries 3000 \
       --sessions 64 [--check] [--slack-us 20000] [--max-batch 64]
+
+Cluster mode (ISSUE 8) serves the same trace through N runtime replicas
+behind the session-affinity dispatcher with SLA-class admission control
+(serve/cluster.py); ``--drill`` kills replica 0 mid-trace (with recovery)
+and ``--check`` asserts every served answer bit-identical to the uncached
+frontend oracle, nonzero re-routed traffic under the drill, and continued
+post-failover service:
+
+  PYTHONPATH=src python -m repro.launch.serve --online --cluster 2 \
+      --queries 3000 --sessions 64 [--drill] [--check]
 """
 from __future__ import annotations
 
@@ -77,6 +87,70 @@ def run_online(args, qidx, kept) -> None:
               f"speedup={naive['mean_us']/max(s['mean_us'], 1e-9):.2f}x)")
 
 
+def run_cluster(args, qidx, kept) -> None:
+    from repro.runtime.fault import FaultInjector, ReplicaFault
+    from repro.serve.cluster import (QACServingCluster, assign_sla,
+                                     check_cluster_parity)
+
+    trace = generate_keystroke_trace(kept, KeystrokeTraceConfig(
+        n_sessions=args.sessions, mean_keystroke_ms=args.keystroke_ms,
+        seed=0))
+    reqs = prepare_requests(qidx, trace, k=args.k)
+    sla = assign_sla(reqs, bulk_fraction=0.25)
+    arch = QACArch(k=args.k)
+    rt_cfg = arch.runtime_config()
+    if args.max_batch is not None:
+        rt_cfg.max_batch = args.max_batch
+    if args.slack_us is not None:
+        rt_cfg.slack_us = args.slack_us
+    cl_cfg = arch.cluster_config(n_replicas=args.cluster)
+    injector = None
+    t_kill = t_up = None
+    if args.drill:
+        # kill replica 0 mid-trace, recover after 2 heartbeat timeouts —
+        # the drill exercises detection, failover AND re-admission
+        t_kill = reqs[len(reqs) // 2].t_us
+        t_up = t_kill + 2 * cl_cfg.heartbeat_timeout_us
+        injector = FaultInjector([], replica_faults=[
+            ReplicaFault(0, t_kill, t_up)])
+    # ONE warm frontend shared by every replica: complete() is pure, so
+    # sharing cannot change results, and the jit variants compile once
+    frontend = QACFrontend(qidx, k=args.k, specialize_list_pad=False)
+    cluster = QACServingCluster(qidx, cl_cfg, rt_cfg,
+                                frontends=[frontend] * args.cluster,
+                                injector=injector)
+    print(f"[serve] cluster: {args.cluster} replicas, {len(reqs)} requests, "
+          f"{sum(s == 'bulk' for s in sla)} bulk"
+          + (f", drill kill@{t_kill/1e3:.0f}ms up@{t_up/1e3:.0f}ms"
+             if args.drill else ""))
+    results = cluster.replay(reqs, sla)
+    s = cluster.telemetry.snapshot()
+    print(f"[serve] cluster: served={s['served']} rejected={s['rejected']} "
+          f"(shed_rate={s['shed_rate']:.3f}, degrade_rate="
+          f"{s['degrade_rate']:.3f}) per_replica={s['per_replica']}")
+    print(f"[serve] cluster: interactive p50={s['interactive_p50_us']:.0f}us "
+          f"p99={s['interactive_p99_us']:.0f}us | bulk "
+          f"p99={s['bulk_p99_us']:.0f}us | sheds={s['shed']}")
+    if args.drill:
+        print(f"[serve] cluster: deaths={s['deaths']} "
+              f"readmissions={s['readmissions']} rerouted={s['rerouted']} "
+              f"failover_p99={s['failover_p99_us']:.0f}us")
+    if args.check:
+        n = check_cluster_parity(frontend, reqs, results)
+        assert n > 0, "no served results to check"
+        if args.drill:
+            assert s["rerouted"] > 0, "drill produced no re-routed traffic"
+            assert s["deaths"], "drill death was never detected"
+            # availability: the surviving replicas kept serving requests
+            # that ARRIVED after the kill
+            post = [r for q, r in zip(reqs, results)
+                    if q.t_us > t_kill and r.status == "ok"]
+            assert post, "no requests served after the kill"
+        print(f"[serve] cluster check OK: {n} served answers bit-identical "
+              f"to the uncached frontend oracle"
+              + (f", {s['rerouted']} re-routed" if args.drill else ""))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--queries", type=int, default=20_000)
@@ -105,6 +179,12 @@ def main():
     ap.add_argument("--check", action="store_true",
                     help="--online only: assert bit-identical parity vs "
                          "naive per-request dispatch + nonzero hit rate")
+    ap.add_argument("--cluster", type=int, default=0,
+                    help="with --online: serve through a QACServingCluster "
+                         "with this many replicas (serve/cluster.py)")
+    ap.add_argument("--drill", action="store_true",
+                    help="--cluster only: kill replica 0 mid-trace and "
+                         "exercise detection/failover/re-admission")
     args = ap.parse_args()
 
     print(f"[serve] generating {args.queries} synthetic scored queries ...")
@@ -117,7 +197,10 @@ def main():
           f"{stats.avg_terms_per_query:.2f} terms/query")
 
     if args.online:
-        run_online(args, qidx, kept)
+        if args.cluster > 0:
+            run_cluster(args, qidx, kept)
+        else:
+            run_online(args, qidx, kept)
         return
 
     if args.interactive:

@@ -1,3 +1,4 @@
 from .fault import (  # noqa: F401
-    StepMonitor, HeartbeatRegistry, ElasticPolicy, FaultInjector, TrainDriver,
+    StepMonitor, HeartbeatRegistry, ElasticPolicy, FaultInjector,
+    ReplicaFault, TrainDriver,
 )

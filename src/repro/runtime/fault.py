@@ -5,10 +5,17 @@ Components a production launcher wires together:
   * HeartbeatRegistry — host liveness; a missed deadline marks the host dead.
   * ElasticPolicy   — given surviving hosts, proposes the largest valid mesh
                       (powers-of-two data axis, fixed model axis) to restart on.
-  * FaultInjector   — deterministic fault schedule for tests/drills.
+  * FaultInjector   — deterministic fault schedule for tests/drills: step-based
+                      (training, ``check``) and time-window replica faults
+                      (serving, ``down`` — see ReplicaFault / ISSUE 8).
   * TrainDriver     — the restart loop: run -> fault -> restore latest ckpt ->
                       (possibly smaller mesh) -> continue. Used by tests and
                       launch/train.py --drill.
+
+The serving cluster (``serve/cluster.py``) reuses StepMonitor (per-replica
+EWMA service time feeds its queue-pressure estimator), HeartbeatRegistry
+(replica liveness on the cluster's virtual microsecond clock), and
+FaultInjector time windows (replica kill/stall drills).
 """
 from __future__ import annotations
 
@@ -85,10 +92,48 @@ class ElasticPolicy:
         return (data, self.model_axis)
 
 
+@dataclasses.dataclass(frozen=True)
+class ReplicaFault:
+    """One scheduled serving fault: ``replica`` is down over
+    ``[t_down_us, t_up_us)`` on the cluster's virtual clock.
+
+    ``kind="kill"`` loses the replica's in-memory state (queue, prefix/session
+    caches — the restarted process re-admits with cold caches); ``"stall"``
+    models a long pause (GC, preemption): the replica stops answering but its
+    state survives recovery.
+    """
+
+    replica: int
+    t_down_us: float
+    t_up_us: float = float("inf")
+    kind: str = "kill"
+
+    def __post_init__(self):
+        if self.kind not in ("kill", "stall"):
+            raise ValueError(f"ReplicaFault.kind must be 'kill' or 'stall', "
+                             f"got {self.kind!r}")
+        if not self.t_down_us < self.t_up_us:
+            raise ValueError(f"ReplicaFault window must be non-empty: "
+                             f"[{self.t_down_us}, {self.t_up_us})")
+
+
 class FaultInjector:
-    def __init__(self, fail_at_steps: list[int], kill_hosts: Optional[list[int]] = None):
+    """Deterministic fault schedule. Two independent APIs:
+
+    * step-based (training): ``check(step)`` raises at scheduled steps —
+      the TrainDriver restart loop catches it;
+    * time-window (serving): ``down(replica, t_us)`` reports whether a
+      scheduled ReplicaFault window covers ``t_us`` — the serving cluster
+      polls it as ground truth while its HeartbeatRegistry provides the
+      dispatcher's (delayed) view.
+    """
+
+    def __init__(self, fail_at_steps: list[int],
+                 kill_hosts: Optional[list[int]] = None,
+                 replica_faults: Optional[list[ReplicaFault]] = None):
         self.fail_at = set(fail_at_steps)
         self.kill_hosts = kill_hosts or []
+        self.replica_faults = list(replica_faults or [])
         self.fired: list[int] = []
 
     def check(self, step: int):
@@ -96,6 +141,16 @@ class FaultInjector:
             self.fired.append(step)
             raise RuntimeError(f"injected node failure at step {step} "
                                f"(hosts {self.kill_hosts})")
+
+    def down(self, replica: int, t_us: float) -> Optional[ReplicaFault]:
+        """The fault window covering (replica, t_us), or None if it is up."""
+        for f in self.replica_faults:
+            if f.replica == replica and f.t_down_us <= t_us < f.t_up_us:
+                return f
+        return None
+
+    def faults_for(self, replica: int) -> list[ReplicaFault]:
+        return [f for f in self.replica_faults if f.replica == replica]
 
 
 class TrainDriver:

@@ -16,4 +16,12 @@ from .runtime import (  # noqa: F401
     prepare_requests,
     run_naive_trace,
 )
+from .cluster import (  # noqa: F401
+    ClusterConfig,
+    ClusterResult,
+    QACServingCluster,
+    assign_sla,
+    check_cluster_parity,
+    rendezvous_route,
+)
 from .lm import prefill_step, make_decode_step  # noqa: F401

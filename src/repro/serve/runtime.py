@@ -23,7 +23,19 @@ missed under that load. This module is the layer in between:
     ``QACFrontend`` call by construction (tests/test_serve_runtime.py
     checks every interleaving against direct per-request calls).
   * **telemetry** — per-request latency percentiles (p50/p95/p99), queue
-    depth, batch-size histogram, dispatch triggers, cache hit rate.
+    depth (max-depth gauge), deadline-violation counter, batch-size
+    histogram, dispatch triggers, cache hit rate.
+
+One instance of this class is ONE serving replica, and on its own it never
+sheds load: the queue is unbounded and every admitted request is served no
+matter how late. That is deliberate — overload policy is a *cluster*
+concern. ``serve/cluster.py::QACServingCluster`` runs N of these replicas
+behind a session-affinity dispatcher and owns the SLA-class admission
+state machine (serve -> degrade -> shed; see that module's docstring);
+its hooks into this runtime are ``on_dispatch`` (per-dispatch service
+telemetry feeding the queue-pressure estimator) and ``done_t_us``
+(virtual completion times, so re-routed requests can be measured from
+their original arrival).
 
 Time model: the runtime runs on an explicit clock in MICROSECONDS. Trace
 replay (``run_trace``) uses the trace's virtual arrival times for queueing
@@ -77,6 +89,22 @@ class RuntimeConfig:
     slack_us: float = 20_000.0   # batching deadline per request (NOT the SLA)
     cache_entries: int = 1 << 16   # exact prefix-result LRU capacity; 0 = off
     session_entries: int = 1 << 16  # session store capacity; 0 = off
+
+    def __post_init__(self):
+        # fail at construction with a nameable field, not deep inside a
+        # dispatch (ISSUE 8 satellite). slack_us == 0 is legal (dispatch
+        # immediately); a negative deadline is not.
+        if self.max_batch <= 0:
+            raise ValueError(f"max_batch must be positive, "
+                             f"got {self.max_batch}")
+        if self.slack_us < 0:
+            raise ValueError(f"slack_us must be >= 0, got {self.slack_us}")
+        if self.cache_entries < 0:
+            raise ValueError(f"cache_entries must be >= 0, "
+                             f"got {self.cache_entries}")
+        if self.session_entries < 0:
+            raise ValueError(f"session_entries must be >= 0, "
+                             f"got {self.session_entries}")
 
 
 @dataclasses.dataclass
@@ -153,6 +181,12 @@ class RuntimeTelemetry:
         self.triggers: Counter = Counter()
         self.queue_peak = 0
         self.engine_wall_us = 0.0
+        # a deadline violation = a dispatch that STARTED after the oldest
+        # batched request's (arrival + slack) deadline — the server was so
+        # backed up the batching budget was already blown before service
+        # began. The saturation bench (ISSUE 8) gates on this counter and
+        # on queue_peak, so both are first-class snapshot() fields.
+        self.deadline_violations = 0
 
     def record(self, path: str, lat_us: float):
         self.paths[path] += 1
@@ -181,6 +215,8 @@ class RuntimeTelemetry:
             "batch_hist": hist,
             "triggers": dict(self.triggers),
             "queue_peak": self.queue_peak,
+            "max_queue_depth": self.queue_peak,
+            "deadline_violations": self.deadline_violations,
             "engine_wall_us": float(self.engine_wall_us),
         }
 
@@ -197,6 +233,11 @@ class QACOnlineRuntime:
         self.fwd = np.asarray(frontend.qidx.completions.fwd_terms)
         # posting-list lengths (host), for the completeness proof below
         self._list_lens = frontend._list_lens
+        # cluster hook (serve/cluster.py): called as
+        # on_dispatch(batch_size, wall_us, t_start) after every engine
+        # dispatch, feeding the dispatcher's per-replica EWMA service-time
+        # estimate. None = standalone runtime, no observer.
+        self.on_dispatch = None
         self.reset()
 
     def reset(self):
@@ -205,6 +246,10 @@ class QACOnlineRuntime:
         self.queue: deque = deque()
         self._server_free = 0.0
         self._results: dict[int, np.ndarray] = {}
+        # virtual completion time per request idx (t_us + its latency) —
+        # the cluster measures re-routed requests from their ORIGINAL
+        # arrival, which only it knows, so it reads completion times here
+        self.done_t_us: dict[int, float] = {}
         self.telemetry = RuntimeTelemetry()
 
     # -- host mirrors of the engine's semantics -------------------------------
@@ -291,6 +336,7 @@ class QACOnlineRuntime:
     def _finish(self, r: QACRequest, row: np.ndarray, path: str,
                 lat_us: float):
         self._results[r.idx] = row
+        self.done_t_us[r.idx] = r.t_us + lat_us
         self.telemetry.record(path, lat_us)
 
     # -- scheduler ------------------------------------------------------------
@@ -368,6 +414,9 @@ class QACOnlineRuntime:
         tel.batch_sizes.append(len(batch))
         tel.triggers[trigger] += 1
         tel.engine_wall_us += dt_us
+        tel.deadline_violations += sum(t_start > r.deadline for r in batch)
+        if self.on_dispatch is not None:
+            self.on_dispatch(len(batch), dt_us, t_start)
         for i, r in enumerate(batch):
             row = out[i, : r.k].copy()
             self._remember(r, row, None)

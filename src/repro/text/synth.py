@@ -71,6 +71,17 @@ class KeystrokeTraceConfig:
     max_backspace: int = 3
     popularity_zipf_s: float = 1.05     # target-query popularity skew
     seed: int = 0
+    # open-loop offered load (ISSUE 8): when set, the whole trace's time
+    # axis is rescaled so the emitted request rate equals ``target_qps``
+    # regardless of how the generated trace was served — arrivals never
+    # wait for completions, the definition of an open-loop saturation
+    # sweep. Scaling time (rather than resampling sessions) keeps the
+    # REQUEST SET identical across offered loads, so a QPS sweep compares
+    # the same work at different arrival pressure; crank ``n_sessions``
+    # too when the workload should also be *wider* (more concurrent
+    # session caches), not just faster. Seeded-deterministic: the rescale
+    # is a pure function of the base trace.
+    target_qps: float | None = None
 
 
 def generate_keystroke_trace(queries: list[str],
@@ -111,6 +122,18 @@ def generate_keystroke_trace(queries: list[str],
                 n += 1
             t += rng.exponential(5 * cfg.mean_keystroke_ms) * 1e3  # dwell
     events.sort(key=lambda e: (e[0], e[1]))
+    if cfg.target_qps is not None and len(events) > 1:
+        if cfg.target_qps <= 0:
+            raise ValueError(f"target_qps must be positive, "
+                             f"got {cfg.target_qps}")
+        t0, t1 = events[0][0], events[-1][0]
+        if t1 > t0:
+            # offered QPS of the base trace over its span; scale every
+            # timestamp (session starts, keystroke gaps, backspace runs,
+            # dwells alike) so the span carries target_qps requests/sec
+            base_qps = (len(events) - 1) / (t1 - t0) * 1e6
+            scale = base_qps / cfg.target_qps
+            events = [((t - t0) * scale, s, q) for t, s, q in events]
     return events
 
 

@@ -1,0 +1,110 @@
+"""Fault-component unit tests (ISSUE 8 satellite): StepMonitor straggler
+z-score edges, HeartbeatRegistry liveness deadlines on a fake clock, and
+FaultInjector deterministic schedules (step-based and time-window)."""
+import pytest
+
+from repro.runtime.fault import (FaultInjector, HeartbeatRegistry,
+                                 ReplicaFault, StepMonitor)
+
+
+# -------------------------------------------------------------- StepMonitor
+def test_stepmonitor_first_record_never_straggler():
+    m = StepMonitor(warmup=0)
+    assert m.record(0, 1e9) is False        # seeds the mean, no variance yet
+    assert m.mean == 1e9
+
+
+def test_stepmonitor_warmup_suppresses_detection():
+    m = StepMonitor(alpha=0.5, z_threshold=1.0, warmup=10)
+    for i in range(8):
+        m.record(i, 1.0)
+    # a wild outlier inside the warmup window must not flag
+    assert m.record(8, 100.0) is False
+    assert m.stragglers == []
+
+
+def test_stepmonitor_zero_variance_no_division():
+    """Identical step times leave var == 0; the next record must not divide
+    by a zero stddev (and a constant stream is by definition straggler-free)."""
+    m = StepMonitor(alpha=0.1, z_threshold=3.0, warmup=2)
+    for i in range(50):
+        assert m.record(i, 2.0) is False
+    assert m.var == 0.0
+    assert m.stragglers == []
+
+
+def test_stepmonitor_flags_genuine_straggler():
+    m = StepMonitor(alpha=0.1, z_threshold=3.0, warmup=5)
+    rng_dts = [1.0, 1.1, 0.9, 1.0, 1.05, 0.95, 1.0, 1.1, 0.9, 1.0]
+    for i, dt in enumerate(rng_dts):
+        m.record(i, dt)
+    assert m.record(len(rng_dts), 10.0) is True
+    assert m.stragglers and m.stragglers[-1][1] == 10.0
+
+
+def test_stepmonitor_ewma_tracks_level_shift():
+    m = StepMonitor(alpha=0.3, warmup=0)
+    for i in range(40):
+        m.record(i, 1.0)
+    for i in range(40, 80):
+        m.record(i, 5.0)
+    assert abs(m.mean - 5.0) < 0.01         # converged to the new level
+
+
+# -------------------------------------------------------- HeartbeatRegistry
+def test_heartbeat_deadlines_on_fake_clock():
+    now = [0.0]
+    reg = HeartbeatRegistry(timeout_s=10.0, clock=lambda: now[0])
+    reg.beat(0)
+    reg.beat(1)
+    now[0] = 10.0
+    # exactly AT the timeout is still alive (strict > deadline)
+    assert reg.dead_hosts() == []
+    now[0] = 10.0 + 1e-9
+    assert reg.dead_hosts() == [0, 1]
+    reg.beat(1)
+    assert reg.dead_hosts() == [0]
+    assert reg.alive_hosts() == [1]
+
+
+def test_heartbeat_unknown_host_not_listed():
+    reg = HeartbeatRegistry(timeout_s=1.0, clock=lambda: 100.0)
+    assert reg.dead_hosts() == []
+    assert reg.alive_hosts() == []
+
+
+# ------------------------------------------------------------ FaultInjector
+def test_injector_step_schedule_fires_once():
+    inj = FaultInjector([3, 7], kill_hosts=[1])
+    inj.check(0)
+    with pytest.raises(RuntimeError):
+        inj.check(3)
+    inj.check(3)                            # already fired: no re-raise
+    with pytest.raises(RuntimeError):
+        inj.check(7)
+    assert inj.fired == [3, 7]
+
+
+def test_injector_replica_windows():
+    faults = [ReplicaFault(0, 100.0, 200.0),
+              ReplicaFault(1, 150.0, kind="stall")]
+    inj = FaultInjector([], replica_faults=faults)
+    assert inj.down(0, 99.9) is None
+    assert inj.down(0, 100.0) is faults[0]  # half-open: down AT t_down
+    assert inj.down(0, 199.9) is faults[0]
+    assert inj.down(0, 200.0) is None       # ... up AT t_up
+    assert inj.down(1, 1e12) is faults[1]   # open-ended window
+    assert inj.down(2, 150.0) is None       # un-scheduled replica
+    assert inj.faults_for(0) == [faults[0]]
+    assert inj.faults_for(2) == []
+
+
+def test_replica_fault_validation():
+    with pytest.raises(ValueError):
+        ReplicaFault(0, 100.0, 100.0)       # empty window
+    with pytest.raises(ValueError):
+        ReplicaFault(0, 200.0, 100.0)       # inverted window
+    with pytest.raises(ValueError):
+        ReplicaFault(0, 0.0, kind="flake")  # unknown kind
+    ReplicaFault(0, 0.0, kind="stall")      # valid kinds construct fine
+    ReplicaFault(0, 0.0, kind="kill")

@@ -1,0 +1,339 @@
+"""Multi-replica serving cluster (ISSUE 8): the fault-drill correctness
+gate — kill/stall a replica mid-trace and every non-REJECTED answer stays
+bit-identical to the uncached frontend oracle while the cluster keeps
+serving — plus session-affinity routing, the admission ladder
+(degrade -> shed_bulk -> shed -> queue_full) driven deterministically by a
+seeded pressure estimator, and construction-time config validation.
+"""
+import numpy as np
+import pytest
+
+from repro.core import build_qac_index
+from repro.runtime.fault import FaultInjector, ReplicaFault
+from repro.serve import QACFrontend
+from repro.serve.cluster import (ClusterConfig, QACServingCluster,
+                                 assign_sla, check_cluster_parity,
+                                 rendezvous_route)
+from repro.serve.runtime import RuntimeConfig, prepare_requests
+from repro.text import (KeystrokeTraceConfig, SynthLogConfig,
+                        generate_keystroke_trace, generate_query_log)
+
+
+@pytest.fixture(scope="module")
+def built():
+    qs, sc = generate_query_log(SynthLogConfig(n_queries=500, vocab_size=140,
+                                               mean_term_chars=4.0, seed=7))
+    qidx, kept, _ = build_qac_index(qs, sc)
+    fe = QACFrontend(qidx, k=10, specialize_list_pad=False)
+    return qidx, kept, fe
+
+
+@pytest.fixture(scope="module")
+def trace_reqs(built):
+    qidx, kept, _ = built
+    trace = generate_keystroke_trace(kept, KeystrokeTraceConfig(
+        n_sessions=10, mean_keystroke_ms=5.0, session_spread_ms=20.0,
+        seed=11))
+    return prepare_requests(qidx, trace, k=10)
+
+
+_RT = dict(max_batch=8, slack_us=2000.0)
+
+# parity/affinity/drill tests disable the pressure ladder (huge thresholds
+# never trip on a CI box whose real wall-clock service times are arbitrary);
+# the admission tests drive the ladder deterministically with a seeded EWMA
+_RELAXED = dict(degrade_pressure_us=1e12, shed_bulk_pressure_us=1e12,
+                shed_pressure_us=1e12)
+
+
+def _cluster(built, cl_cfg, injector=None, rt=None):
+    """Replicas share the module's ONE warm frontend (complete() is pure,
+    so sharing cannot change results and jit variants compile once)."""
+    qidx, _, fe = built
+    return QACServingCluster(
+        qidx, cl_cfg, RuntimeConfig(**(rt or _RT)),
+        frontends=[fe] * cl_cfg.n_replicas, injector=injector)
+
+
+# ------------------------------------------------------------ routing
+def test_rendezvous_sticky_and_minimal_disruption():
+    alive = [0, 1, 2, 3]
+    routes = {s: rendezvous_route(s, alive) for s in range(500)}
+    # sticky: pure function of (session, alive set)
+    assert routes == {s: rendezvous_route(s, alive) for s in range(500)}
+    # all replicas get traffic
+    assert set(routes.values()) == set(alive)
+    # minimal disruption: removing replica 2 moves ONLY its sessions
+    alive2 = [0, 1, 3]
+    for s, r in routes.items():
+        if r != 2:
+            assert rendezvous_route(s, alive2) == r
+        else:
+            assert rendezvous_route(s, alive2) in alive2
+    assert rendezvous_route(5, []) is None
+
+
+def test_assign_sla_deterministic_per_session():
+    class R:
+        def __init__(self, s):
+            self.session = s
+    reqs = [R(s % 7) for s in range(100)]
+    sla = assign_sla(reqs, bulk_fraction=0.5)
+    assert sla == assign_sla(reqs, bulk_fraction=0.5)
+    by_sess = {}
+    for r, s in zip(reqs, sla):
+        assert by_sess.setdefault(r.session, s) == s   # class is per-session
+    with pytest.raises(ValueError):
+        assign_sla(reqs, bulk_fraction=1.5)
+
+
+# ---------------------------------------------------- healthy-cluster parity
+def test_healthy_cluster_parity_and_affinity(built, trace_reqs):
+    _, _, fe = built
+    cl = _cluster(built, ClusterConfig(n_replicas=2, **_RELAXED))
+    res = cl.replay(trace_reqs)
+    assert all(r.status == "ok" for r in res)
+    assert check_cluster_parity(fe, trace_reqs, res) == len(trace_reqs)
+    # session affinity: with no faults, every session stays on one replica
+    by_sess = {}
+    for q, r in zip(trace_reqs, res):
+        assert by_sess.setdefault(q.session, r.replica) == r.replica
+    # and with >1 session per replica expected, both replicas served
+    assert len(cl.telemetry.per_replica) == 2
+
+
+def test_mixed_sla_healthy_cluster_serves_everything(built, trace_reqs):
+    _, _, fe = built
+    cl = _cluster(built, ClusterConfig(n_replicas=2, **_RELAXED))
+    res = cl.replay(trace_reqs, assign_sla(trace_reqs, bulk_fraction=0.4))
+    assert all(r.status == "ok" for r in res)     # no pressure, no sheds
+    assert check_cluster_parity(fe, trace_reqs, res) == len(trace_reqs)
+
+
+# ------------------------------------------------------------- fault drills
+def _drill_cfg():
+    return ClusterConfig(n_replicas=2, heartbeat_timeout_us=50_000.0,
+                         **_RELAXED)
+
+
+def test_kill_drill_parity_reroute_availability(built, trace_reqs):
+    """THE acceptance gate: kill a replica mid-trace; every answer stays
+    bit-identical to the uncached oracle, traffic re-routes, and the
+    cluster keeps serving."""
+    _, _, fe = built
+    t_kill = trace_reqs[len(trace_reqs) // 2].t_us
+    inj = FaultInjector([], replica_faults=[ReplicaFault(0, t_kill)])
+    cl = _cluster(built, _drill_cfg(), injector=inj)
+    res = cl.replay(trace_reqs)
+    snap = cl.telemetry.snapshot()
+    # nothing lost: every request has an explicit outcome, none rejected
+    # (the survivor had capacity) — and ALL served rows are bit-exact
+    assert len(res) == len(trace_reqs)
+    served = [r for r in res if r.status == "ok"]
+    assert check_cluster_parity(fe, trace_reqs, res) == len(served)
+    assert snap["rerouted"] > 0
+    assert any(r.rerouted for r in served)
+    assert snap["deaths"] and snap["deaths"][0][1] == 0
+    # availability: requests ARRIVING after the kill still get served
+    post = [r for q, r in zip(trace_reqs, res)
+            if q.t_us > t_kill and r.status == "ok"]
+    assert post
+    assert all(r.replica == 1 for r in post)   # ... by the survivor
+    assert snap["failover_p99_us"] > 0
+
+
+def test_kill_recovery_readmits_replica(built, trace_reqs):
+    _, _, fe = built
+    t_kill = trace_reqs[len(trace_reqs) // 3].t_us
+    # recover quickly: well before the trace ends, so re-admission shows
+    # up as post-recovery traffic on replica 0
+    inj = FaultInjector([], replica_faults=[
+        ReplicaFault(0, t_kill, t_kill + 60_000.0)])
+    cl = _cluster(built, _drill_cfg(), injector=inj)
+    res = cl.replay(trace_reqs)
+    snap = cl.telemetry.snapshot()
+    assert check_cluster_parity(fe, trace_reqs, res) == snap["served"]
+    assert snap["deaths"] and snap["readmissions"]
+    t_re = snap["readmissions"][0][0]
+    # replica 0 serves again after re-admission
+    assert any(r.replica == 0 for q, r in zip(trace_reqs, res)
+               if r.status == "ok" and q.t_us > t_re)
+
+
+def test_stall_drill_keeps_parity(built, trace_reqs):
+    """A stall freezes service without losing state; answers afterwards
+    must still be exact (and the stall window must not virtually serve)."""
+    _, _, fe = built
+    t0 = trace_reqs[len(trace_reqs) // 2].t_us
+    inj = FaultInjector([], replica_faults=[
+        ReplicaFault(0, t0, t0 + 100_000.0, kind="stall")])
+    cl = _cluster(built, _drill_cfg(), injector=inj)
+    res = cl.replay(trace_reqs)
+    assert check_cluster_parity(fe, trace_reqs, res) == sum(
+        r.status == "ok" for r in res)
+    assert len(res) == len(trace_reqs)      # nothing lost to the stall
+
+
+# --------------------------------------------------------- admission ladder
+def _ladder_reqs(built, n, k=10):
+    """n requests at t=0, distinct sessions + distinct queries (no cache
+    interactions), all single-term (multi-term eligibility is exercised
+    separately)."""
+    qidx, kept, _ = built
+    uniq = sorted({q.split()[0] for q in kept})
+    assert len(uniq) >= n
+    trace = [(0.0, s, uniq[s]) for s in range(n)]
+    return prepare_requests(qidx, trace, k=k)
+
+
+def test_admission_ladder_deterministic(built):
+    """Seed the pressure EWMA directly (1 ms per queued request) and pick
+    thresholds so successive same-instant arrivals walk the whole ladder:
+    full, full, degrade, degrade, shed. Deterministic — no wall clocks."""
+    _, _, fe = built
+    cfg = ClusterConfig(n_replicas=1, degrade_pressure_us=1_500.0,
+                        shed_bulk_pressure_us=2_500.0,
+                        shed_pressure_us=3_500.0, degraded_k=2)
+    # huge slack / batch: nothing dispatches while the burst queues up
+    cl = _cluster(built, cfg, rt=dict(max_batch=64, slack_us=1e9))
+    cl.replicas[0].monitor.record(1, 1_000.0)
+    reqs = _ladder_reqs(built, 6)
+    res = cl.run_trace(reqs)
+    # est at arrival i = i * 1000us (queue depth i, empty backlog)
+    assert [r.status for r in res] == ["ok"] * 4 + ["rejected"] * 2
+    assert [r.degraded for r in res[:4]] == [False, False, True, True]
+    assert [r.k_served for r in res[:4]] == [10, 10, 2, 2]
+    assert all(r.reason == "shed_overload" for r in res[4:])
+    # degraded rows are still exact at their served k
+    assert check_cluster_parity(fe, reqs, res) == 4
+    snap = cl.telemetry.snapshot()
+    assert snap["shed_rate"] == pytest.approx(2 / 6)
+    assert snap["degrade_rate"] == pytest.approx(2 / 6)
+
+
+def test_admission_bulk_sheds_first(built):
+    _, _, fe = built
+    cfg = ClusterConfig(n_replicas=1, degrade_pressure_us=1_500.0,
+                        shed_bulk_pressure_us=2_500.0,
+                        shed_pressure_us=3_500.0, degraded_k=2)
+    cl = _cluster(built, cfg, rt=dict(max_batch=64, slack_us=1e9))
+    cl.replicas[0].monitor.record(1, 1_000.0)
+    reqs = _ladder_reqs(built, 5)
+    res = cl.run_trace(reqs, "bulk")
+    # bulk walks: full, full, degrade, shed_bulk (est 3000 >= 2500), shed
+    assert [r.status for r in res] == ["ok"] * 3 + ["rejected"] * 2
+    assert res[2].degraded and res[2].k_served == 2
+    assert res[3].reason == "shed_bulk"
+    assert res[4].reason == "shed_bulk"    # depth stuck at 3, est 3000
+    assert check_cluster_parity(fe, reqs, res) == 3
+
+
+def test_admission_degrade_skips_bulk_multi_term(built):
+    """In the degrade tier a BULK request needing the conjunctive engine is
+    rejected outright (the expensive class goes first); the same request as
+    interactive is served, degraded."""
+    qidx, kept, fe = built
+    multi = next(q for q in kept if len(q.split()) >= 2)
+    words = multi.split()
+    partial = words[0] + " " + words[1][:1]
+    cfg = ClusterConfig(n_replicas=1, degrade_pressure_us=500.0,
+                        shed_bulk_pressure_us=1e9, shed_pressure_us=1e9,
+                        degraded_k=2)
+    for sla, want_status in [("bulk", "rejected"), ("interactive", "ok")]:
+        cl = _cluster(built, cfg, rt=dict(max_batch=64, slack_us=1e9))
+        cl.replicas[0].monitor.record(1, 1_000.0)
+        reqs = prepare_requests(qidx, [(0.0, 0, kept[0].split()[0]),
+                                       (0.0, 1, partial)], k=10)
+        res = cl.run_trace(reqs, ["interactive", sla])
+        assert res[1].status == want_status
+        if want_status == "rejected":
+            assert res[1].reason == "degrade_skip_multi"
+        else:
+            assert res[1].degraded
+        check_cluster_parity(fe, reqs, res)
+
+
+def test_bounded_queue_backstop(built):
+    """With the pressure ladder disabled (huge thresholds) the bounded
+    queue still rejects: depth can never exceed max_queue."""
+    cfg = ClusterConfig(n_replicas=1, max_queue=3,
+                        degrade_pressure_us=1e12,
+                        shed_bulk_pressure_us=1e12, shed_pressure_us=1e12)
+    cl = _cluster(built, cfg, rt=dict(max_batch=64, slack_us=1e9))
+    reqs = _ladder_reqs(built, 6)
+    res = cl.run_trace(reqs)
+    assert [r.status for r in res] == ["ok"] * 3 + ["rejected"] * 3
+    assert all(r.reason == "queue_full" for r in res[3:])
+
+
+# --------------------------------------------------------------- validation
+def test_cluster_config_validation():
+    with pytest.raises(ValueError):
+        ClusterConfig(n_replicas=0)
+    with pytest.raises(ValueError):
+        ClusterConfig(max_queue=0)
+    with pytest.raises(ValueError):
+        ClusterConfig(degraded_k=0)
+    with pytest.raises(ValueError):
+        ClusterConfig(degrade_pressure_us=0.0)
+    with pytest.raises(ValueError):          # mis-ordered ladder
+        ClusterConfig(degrade_pressure_us=5.0, shed_bulk_pressure_us=4.0)
+    with pytest.raises(ValueError):
+        ClusterConfig(shed_bulk_pressure_us=200_000.0,
+                      shed_pressure_us=100_000.0)
+    with pytest.raises(ValueError):
+        ClusterConfig(heartbeat_timeout_us=0.0)
+
+
+def test_runtime_config_validation():
+    with pytest.raises(ValueError):
+        RuntimeConfig(max_batch=0)
+    with pytest.raises(ValueError):
+        RuntimeConfig(slack_us=-1.0)
+    with pytest.raises(ValueError):
+        RuntimeConfig(cache_entries=-1)
+    with pytest.raises(ValueError):
+        RuntimeConfig(session_entries=-1)
+    RuntimeConfig(slack_us=0.0)              # zero slack is a legal config
+
+
+def test_cluster_capacity_validation(built, trace_reqs):
+    qidx, _, fe = built
+    cap = int(qidx.completions.n)
+    with pytest.raises(ValueError):          # degraded_k beyond the corpus
+        QACServingCluster(qidx, ClusterConfig(degraded_k=cap + 1),
+                          frontends=[fe, fe])
+    with pytest.raises(ValueError):          # fault aimed at no replica
+        QACServingCluster(
+            qidx, ClusterConfig(n_replicas=2), frontends=[fe, fe],
+            injector=FaultInjector([], replica_faults=[ReplicaFault(7, 0.0)]))
+    cl = QACServingCluster(qidx, ClusterConfig(n_replicas=2),
+                           frontends=[fe, fe])
+    big = [dataclasses_replace_k(r, cap + 1) for r in trace_reqs[:3]]
+    with pytest.raises(ValueError):          # k beyond index capacity
+        cl.run_trace(big)
+    with pytest.raises(ValueError):          # wrong frontend count
+        QACServingCluster(qidx, ClusterConfig(n_replicas=3),
+                          frontends=[fe, fe])
+    with pytest.raises(ValueError):
+        cl.submit(trace_reqs[0], sla="premium")
+
+
+def dataclasses_replace_k(r, k):
+    import dataclasses
+    return dataclasses.replace(r, k=k)
+
+
+# ---------------------------------------------------------------- telemetry
+def test_cluster_percentiles_pinned_to_numpy(built):
+    """ClusterTelemetry quantile math is np.percentile, verbatim."""
+    from repro.serve.cluster import ClusterTelemetry
+    t = ClusterTelemetry()
+    lats = [float(x) for x in [10, 20, 30, 1000, 55, 7, 7, 90, 300, 42]]
+    t.lat_us["interactive"] = list(lats)
+    snap = t.snapshot()
+    for p in (50, 95, 99):
+        assert snap[f"interactive_p{p}_us"] == float(np.percentile(lats, p))
+    assert snap["interactive_mean_us"] == pytest.approx(np.mean(lats))
+    assert snap["bulk_p99_us"] == 0.0        # empty class: zero, not NaN
+    assert snap["shed_rate"] == 0.0

@@ -308,3 +308,68 @@ def test_runtime_parity_seeded_schedules(built, seed):
         lambda a, b: int(rng.integers(a, b + 1)),
         lambda a, b: float(rng.uniform(a, b)),
         lambda xs: xs[int(rng.integers(0, len(xs)))])
+
+
+# -------------------------------------------------- telemetry (ISSUE 8)
+def test_telemetry_percentiles_pinned_to_numpy():
+    """snapshot()'s quantile math is np.percentile, verbatim — no
+    hand-rolled interpolation allowed to drift."""
+    from repro.serve.runtime import RuntimeTelemetry
+    t = RuntimeTelemetry()
+    lats = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0, 535.0, 89.0, 79.0]
+    for x in lats:
+        t.record("miss", x)
+    s = t.snapshot()
+    for p in (50, 95, 99):
+        assert s[f"p{p}_us"] == float(np.percentile(lats, p))
+    assert s["mean_us"] == pytest.approx(np.mean(lats))
+    assert s["max_us"] == max(lats)
+    assert s["deadline_violations"] == 0
+    assert s["max_queue_depth"] == 0
+
+
+def test_telemetry_deadline_violations_and_queue_gauge(built):
+    """Two same-instant arrivals under max_batch=1/slack=0: the second
+    dispatch starts at server_free > its deadline — exactly one violation
+    per such pile-up. Then a held queue pins the max-depth gauge."""
+    qidx, kept, fe = built
+    words = sorted({q.split()[0] for q in kept})[:6]
+    reqs = prepare_requests(qidx, [(0.0, s, w) for s, w in enumerate(words)],
+                            k=10)
+    rt = QACOnlineRuntime(fe, RuntimeConfig(**_SYNC))
+    rt.run_trace(reqs)
+    s = rt.telemetry.snapshot()
+    # first dispatch starts exactly at its deadline (t=0): not a violation;
+    # every later one starts behind the busy server: violation
+    assert s["deadline_violations"] == len(reqs) - 1
+    # huge slack + batch: all requests sit queued until drain
+    rt2 = QACOnlineRuntime(fe, RuntimeConfig(max_batch=64, slack_us=1e9))
+    rt2.run_trace(reqs)
+    s2 = rt2.telemetry.snapshot()
+    assert s2["max_queue_depth"] == len(reqs)
+    assert s2["max_queue_depth"] == s2["queue_peak"]   # back-compat alias
+    assert s2["deadline_violations"] == 0              # drain fires in time
+
+
+# ---------------------------------------------- open-loop traces (ISSUE 8)
+def test_trace_target_qps_rescales_and_is_deterministic(built):
+    qidx, kept, fe = built
+    base_cfg = KeystrokeTraceConfig(n_sessions=8, mean_keystroke_ms=50.0,
+                                    seed=13)
+    base = generate_keystroke_trace(kept, base_cfg)
+    for qps in (50.0, 400.0):
+        cfg = KeystrokeTraceConfig(n_sessions=8, mean_keystroke_ms=50.0,
+                                   seed=13, target_qps=qps)
+        tr = generate_keystroke_trace(kept, cfg)
+        tr2 = generate_keystroke_trace(kept, cfg)
+        assert tr == tr2                        # seeded-deterministic
+        # same REQUEST SET, rescaled time axis
+        assert [(s, q) for _, s, q in tr] == [(s, q) for _, s, q in base]
+        span_s = (tr[-1][0] - tr[0][0]) / 1e6
+        assert (len(tr) - 1) / span_s == pytest.approx(qps, rel=1e-6)
+        assert tr[0][0] == 0.0
+        # ordering preserved -> still a valid runtime trace
+        assert all(a[0] <= b[0] for a, b in zip(tr, tr[1:]))
+    with pytest.raises(ValueError):
+        generate_keystroke_trace(kept, KeystrokeTraceConfig(
+            n_sessions=2, seed=13, target_qps=-1.0))
