@@ -1,0 +1,178 @@
+"""Freshness-tier bench (ISSUE 9): live-update cost + post-swap recovery.
+
+Three measurements over the generational serving layer
+(serve/freshness.py), emitted into BENCH_qac.json:
+
+  * ``qac_freshness_apply_p99_us`` — p99 wall time of a single live insert
+    into the delta tier (tokenize + dictionary lookup + shadow detection +
+    append-only postings), over a mixed stream of new inserts and trend
+    raises with no swaps. This is the "trending query becomes suggestible"
+    latency — the number the offline-rebuild world cannot have.
+  * ``qac_freshness_swap_stall_p99_us`` — p99 of the swap STALL (drain +
+    absorb + install) across a mutation-trace replay with at least one
+    mid-trace rebuild-and-swap. The rebuild itself runs "in background"
+    and is reported (not gated) as derived info.
+  * ``qac_freshness_hit_rate_recovery`` — post-swap cache hit rate over
+    pre-swap hit rate, from the runtime's per-generation telemetry. A swap
+    flushes both cache tiers exactly once; keystroke locality must re-warm
+    them within the same trace.
+
+Acceptance gates, enforced here:
+  * every sampled answer of the swap trace is bit-identical to a
+    from-scratch build at its visible (generation, seq) version
+    (``GenerationalQAC.check_parity``), the trace swaps >= 1 time, each
+    swap invalidates each cache tier exactly once, and the delta tier
+    serves a nonzero number of answers;
+  * hit-rate recovery >= 0.5;
+  * the merged single-term path at B=256 (parse + main engine + per-row
+    delta merge, keys ``qac_freshness_merged_single_b256_us`` /
+    ``qac_freshness_immutable_single_b256_us``) stays <= 1.5x the
+    immutable-only path (parse + main engine) on the same batch.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if "--quick" in sys.argv:               # before .common reads BENCH_QUICK
+    os.environ["BENCH_QUICK"] = "1"
+
+import numpy as np
+
+from .common import bench_corpus, emit, timer, QUICK, write_bench_json
+from repro.serve.freshness import FreshnessConfig, GenerationalQAC
+from repro.serve.runtime import RuntimeConfig
+from repro.text import (KeystrokeTraceConfig, MutationTraceConfig,
+                        generate_mutation_trace)
+
+MERGE_OVERHEAD_CAP = 1.5     # merged single-term path vs immutable, B=256
+RECOVERY_FLOOR = 0.5         # post-swap hit rate vs pre-swap
+
+
+def _base_scores(kept):
+    # deterministic frequency-like scores for the canonical corpus (the
+    # bench corpus helper returns kept strings; scores only shape trend
+    # targets here)
+    rng = np.random.default_rng(13)
+    return rng.zipf(1.3, size=len(kept)).astype(np.float64)
+
+
+def main():
+    qidx, kept, host, rows, d_of_row = bench_corpus()
+    kept = list(kept)
+    scores = _base_scores(kept)
+    rt_cfg = RuntimeConfig(max_batch=64, slack_us=2_000.0)
+
+    # -- apply latency: mixed insert/trend stream, no swaps ------------------
+    n_apply = 200 if QUICK else 500
+    cap = max(2 * n_apply, 4096)
+    gq = GenerationalQAC(kept, scores, rt_cfg=rt_cfg, cfg=FreshnessConfig(
+        k=10, delta_capacity=cap, swap_threshold=cap))
+    rng = np.random.default_rng(7)
+    vocab = sorted({t for q in kept for t in q.split()})
+    for i in range(n_apply):
+        if i % 3 == 0:      # trend raise on an existing completion
+            q = kept[int(rng.integers(0, len(kept)))]
+            gq.insert(q, float(scores.max()) + i + 1.0, t_us=float(i))
+        else:               # new completion from recombined vocab
+            toks = [vocab[int(j)] for j in
+                    rng.integers(0, len(vocab), size=int(rng.integers(1, 4)))]
+            gq.insert(" ".join(toks), float(np.median(scores)) + 1.0,
+                      t_us=float(i))
+    apply_us = np.asarray([a["wall_us"] for a in gq.apply_log])
+    outcomes = gq.snapshot()["mutation_outcomes"]
+    emit("qac_freshness_apply_p99_us", float(np.percentile(apply_us, 99)),
+         f"p50={np.percentile(apply_us, 50):.0f},n={n_apply},"
+         f"outcomes={'/'.join(f'{k}:{v}' for k, v in sorted(outcomes.items()))}")
+
+    # -- merged vs immutable single-term path at B=256 -----------------------
+    # the delta above is warm (hundreds of live entries) — exactly the
+    # state the merge must stay cheap in
+    B = 256
+    rng2 = np.random.default_rng(11)
+    singles = []
+    for qi in rng2.integers(0, len(kept), B):
+        t0 = kept[qi].split()[0]
+        singles.append(t0[: max(1, int(rng2.integers(1, len(t0) + 1)))])
+    g = gq.history[gq.rt.generation]
+
+    def immutable():
+        from repro.serve.freshness import parse_and_prepare
+        reqs = parse_and_prepare(g.qidx, [(0.0, 0, q) for q in singles], k=10)
+        return np.asarray(g.frontend.complete(
+            np.stack([r.pids for r in reqs]),
+            np.asarray([r.plen for r in reqs], np.int32),
+            np.stack([r.suf for r in reqs]),
+            np.asarray([r.slen for r in reqs], np.int32), k=10))
+
+    def merged():
+        return gq.complete_batch(singles, k=10)
+
+    t_imm = timer(immutable, repeats=5, warmup=2) / B * 1e6
+    t_mrg = timer(merged, repeats=5, warmup=2) / B * 1e6
+    emit("qac_freshness_immutable_single_b256_us", t_imm,
+         f"delta_n={g.delta.n}")
+    emit("qac_freshness_merged_single_b256_us", t_mrg,
+         f"overhead={t_mrg / t_imm:.2f}x,cap={MERGE_OVERHEAD_CAP}x")
+    assert t_mrg <= MERGE_OVERHEAD_CAP * t_imm, \
+        (f"merged single-term path {t_mrg:.1f}us/q exceeds "
+         f"{MERGE_OVERHEAD_CAP}x immutable {t_imm:.1f}us/q at B={B}")
+
+    # -- swap trace: stall + hit-rate recovery + time-indexed parity ---------
+    # small max_batch keeps each new generation's jit-variant warm sweep
+    # (part of rebuild_wall_us) to a few buckets per engine class — the
+    # recovery/stall numbers don't depend on batch shaping
+    n_mut = 16
+    swap_thr = max(2, n_mut // 2)       # one swap near mid-trace
+    rt_small = RuntimeConfig(max_batch=8, slack_us=2_000.0)
+    gq2 = GenerationalQAC(kept, scores, rt_cfg=rt_small, cfg=FreshnessConfig(
+        k=10, delta_capacity=4096, swap_threshold=swap_thr))
+    events = generate_mutation_trace(kept, scores, MutationTraceConfig(
+        keystrokes=KeystrokeTraceConfig(
+            n_sessions=24 if QUICK else 48, mean_keystroke_ms=5.0, seed=51),
+        n_mutations=n_mut, follower_sessions=8, seed=3))
+    results = gq2.replay(events)
+    s = gq2.snapshot()
+    rts = s["runtime"]
+    assert s["n_swaps"] >= 1, "swap trace produced no generation swap"
+    for key, inv in rts["invalidations"].items():
+        assert inv["count"] == 1, \
+            f"swap {key} invalidated caches {inv['count']} times"
+    assert len(rts["invalidations"]) == s["n_swaps"], \
+        "each swap must invalidate the cache tiers exactly once"
+    assert s["delta_hit_answers"] > 0, "no answer used the delta tier"
+    n_par = gq2.check_parity(results,
+                             sample_every=max(1, len(results) // 150))
+    stalls = [sw["swap_stall_us"] for sw in gq2.swap_log]
+    rebuilds = [sw["rebuild_wall_us"] for sw in gq2.swap_log]
+    emit("qac_freshness_swap_stall_p99_us",
+         float(np.percentile(stalls, 99)),
+         f"swaps={s['n_swaps']},rebuild_p50_ms="
+         f"{np.percentile(rebuilds, 50)/1e3:.0f},parity_n={n_par}")
+
+    def hit_rate(paths: dict) -> float:
+        n = sum(paths.values())
+        return (paths.get("hit_exact", 0) + paths.get("hit_session", 0)) / max(n, 1)
+
+    per_gen = rts["per_generation"]
+    pre = hit_rate(per_gen.get(0, {}))
+    post_paths = {}
+    for g_id, paths in per_gen.items():
+        if g_id == 0:
+            continue
+        for p, c in paths.items():
+            post_paths[p] = post_paths.get(p, 0) + c
+    post = hit_rate(post_paths)
+    recovery = post / max(pre, 1e-9)
+    emit("qac_freshness_hit_rate_recovery", recovery,
+         f"pre={pre:.3f},post={post:.3f},floor={RECOVERY_FLOOR}")
+    assert pre > 0, "pre-swap trace produced no cache hits to recover from"
+    assert recovery >= RECOVERY_FLOOR, \
+        (f"post-swap hit rate {post:.3f} recovered only {recovery:.2f}x of "
+         f"pre-swap {pre:.3f} (floor {RECOVERY_FLOOR})")
+
+    write_bench_json()
+
+
+if __name__ == "__main__":
+    main()

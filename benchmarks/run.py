@@ -30,6 +30,7 @@ MODULES = [
     "bench_space",
     "bench_qac_serve",
     "bench_qac_cluster",
+    "bench_qac_freshness",
     "bench_roofline",
 ]
 

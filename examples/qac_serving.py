@@ -11,7 +11,14 @@ build a ~20k-completion index, then serve keystroke traffic two ways —
     session-affinity dispatcher take the same trace at overload with
     admission control (SLA-class degrade/shed), then again with a replica
     KILLED mid-trace: the death is detected, its traffic re-routed, and
-    every served answer stays bit-identical to the uncached oracle.
+    every served answer stays bit-identical to the uncached oracle;
+  part 4 (ISSUE 9): the LIVE index — keystroke traffic interleaved with
+    corpus mutations (trending score bumps + newly observed completions)
+    flows through the freshness tier: the delta index absorbs inserts in
+    microseconds, answers are exact k-way merges of both tiers, a
+    mid-trace rebuild-and-swap installs the next generation (caches
+    invalidate exactly once), and sampled answers are verified
+    bit-identical to from-scratch rebuilds at their visible versions.
 
   PYTHONPATH=src python examples/qac_serving.py
 """
@@ -28,7 +35,7 @@ from repro.core import build_qac_index, parse_queries, INF_DOCID
 from repro.serve.qac import qac_serve_step
 
 qs, sc = generate_query_log(SynthLogConfig(n_queries=20_000, seed=1))
-qidx, kept, _ = build_qac_index(qs, sc)
+qidx, kept, kept_sc = build_qac_index(qs, sc)
 print(f"index: {qidx.completions.n} completions, {qidx.dictionary.n_terms} terms")
 
 # keystroke replay: every prefix of 64 random queries, batched
@@ -143,3 +150,36 @@ print(f"drill: replica 0 killed at t={t_mid/1e3:.0f}ms — detected at "
       f"re-routed (failover p99={ds['failover_p99_us']/1e3:.1f}ms), "
       f"{len(ds['readmissions'])} readmission(s); all {served_d} served "
       f"answers bit-identical through the failover")
+
+# -- part 4: the live index (ISSUE 9) ----------------------------------------
+# The corpus now MUTATES mid-trace: trending completions spike, new ones
+# appear. A smaller sub-corpus keeps the example's rebuilds snappy; the
+# trace interleaves keystroke traffic with mutations and follower sessions
+# that type the mutated queries — so a correct delta tier must show up in
+# the answers, not just in the counters.
+from repro.serve.freshness import FreshnessConfig, GenerationalQAC
+from repro.text import MutationTraceConfig, generate_mutation_trace
+from repro.text import KeystrokeTraceConfig
+
+sub, sub_sc = kept[:3000], list(kept_sc[:3000])
+gq = GenerationalQAC(sub, sub_sc,
+                     cfg=FreshnessConfig(k=10, delta_capacity=4096,
+                                         swap_threshold=8),
+                     rt_cfg=RuntimeConfig(max_batch=64, slack_us=2_000.0))
+mut_events = generate_mutation_trace(sub, sub_sc, MutationTraceConfig(
+    keystrokes=KeystrokeTraceConfig(n_sessions=24, mean_keystroke_ms=5.0,
+                                    seed=2),
+    n_mutations=20, follower_sessions=8, seed=2))
+fresh = gq.replay(mut_events)
+fs = gq.snapshot()
+print(f"\nlive index: {sum(e.kind != 'request' for e in mut_events)} "
+      f"mutations over {len(fresh)} answers — outcomes "
+      f"{fs['mutation_outcomes']}, apply p99 "
+      f"{fs['apply_p99_us']:.0f}us; {fs['n_swaps']} generation swap(s), "
+      f"stall p99 {fs['swap_stall_p99_us']/1e3:.1f}ms (rebuilds "
+      f"{[f'{u/1e6:.1f}s' for u in fs['rebuild_wall_us']]} in background)")
+print(f"live index: {fs['delta_hit_answers']} answers carried delta-tier "
+      f"completions; invalidations {fs['runtime']['invalidations']}")
+n_checked = gq.check_parity(fresh, sample_every=max(1, len(fresh) // 100))
+print(f"live index: {n_checked} sampled answers bit-identical to "
+      f"from-scratch rebuilds at their visible (generation, seq) versions")

@@ -20,7 +20,15 @@
 #      sweep with its >=30% hit-rate / >=2x-vs-naive gates, and the striped
 #      path end-to-end; writes the BENCH_qac.json snapshot);
 #   6. quick-mode cluster saturation bench (admission-control SLA gate at
-#      overload + kill-drill failover gate; merges into BENCH_qac.json).
+#      overload + kill-drill failover gate; merges into BENCH_qac.json);
+#   7. freshness smoke: a mutation trace through `--freshness --check`
+#      (delta tier + k-way merge + >=1 mid-trace rebuild-and-swap),
+#      asserting time-indexed bit-parity of sampled answers vs from-scratch
+#      rebuilds at their visible (generation, seq) versions, nonzero
+#      delta-tier hits, and exactly-once cache invalidation per swap;
+#   8. quick-mode freshness bench (apply/swap-stall latency, post-swap
+#      hit-rate-recovery >= 0.5x gate, merged-vs-immutable <= 1.5x gate;
+#      merges into BENCH_qac.json).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -55,6 +63,18 @@ BENCH_QUICK=1 python -m benchmarks.bench_qac_serve
 
 echo "== quick-mode cluster saturation + failover benchmark =="
 BENCH_QUICK=1 python -m benchmarks.bench_qac_cluster
+
+echo "== freshness smoke: delta tier + mid-trace swap parity =="
+# live mutation trace with >= 1 rebuild-and-swap; --check asserts sampled
+# answers are bit-identical to from-scratch builds at their own visible
+# (generation, seq) versions, delta-tier hits are nonzero, and each swap
+# invalidates both cache tiers exactly once
+python -m repro.launch.serve --freshness --check --queries 2000 \
+    --sessions 24 --mutations 18 --max-batch 8 --slack-us 2000 \
+    --keystroke-ms 5
+
+echo "== quick-mode freshness benchmark (apply/swap/recovery gates) =="
+BENCH_QUICK=1 python -m benchmarks.bench_qac_freshness
 
 echo "bench json: $(pwd)/BENCH_qac.json"
 echo "check_seed: OK"

@@ -72,6 +72,13 @@ class QACArch:
     cluster_shed_pressure_us: float = 100_000.0
     cluster_degraded_k: int = 4
     cluster_heartbeat_timeout_us: float = 200_000.0
+    # freshness tier (serve/freshness.py): the in-memory delta absorbing
+    # live inserts between rebuilds. swap_threshold counts visible delta
+    # changes before a rebuild-and-swap; capacity bounds the delta so it
+    # can never overflow between swaps (threshold <= capacity is enforced
+    # by FreshnessConfig.__post_init__).
+    freshness_delta_capacity: int = 4096
+    freshness_swap_threshold: int = 1024
 
     family = "qac"
 
@@ -100,6 +107,18 @@ class QACArch:
             shed_pressure_us=self.cluster_shed_pressure_us,
             degraded_k=self.cluster_degraded_k,
             heartbeat_timeout_us=self.cluster_heartbeat_timeout_us,
+        )
+
+    def freshness_config(self):
+        """The arch's delta-tier/swap knobs as a ``FreshnessConfig``
+        (validated there: k >= 1, capacity >= k, threshold in
+        [1, capacity])."""
+        from ..serve.freshness import FreshnessConfig
+
+        return FreshnessConfig(
+            k=self.k,
+            delta_capacity=self.freshness_delta_capacity,
+            swap_threshold=self.freshness_swap_threshold,
         )
 
     def cells(self):

@@ -23,4 +23,5 @@ from .builder import (  # noqa: F401
     parse_queries,
     corpus_stats,
 )
+from .delta import DeltaIndex, MainCorpusView  # noqa: F401
 from .ref_engines import HostIndex  # noqa: F401

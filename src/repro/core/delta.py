@@ -1,0 +1,306 @@
+"""The freshness delta tier (ISSUE 9 tentpole): a small uncompressed
+in-memory index absorbing newly observed completions between rebuilds.
+
+A production QAC corpus mutates continuously — trending queries must become
+suggestible within seconds, not at the next offline rebuild (paper §1: the
+system replaced eBay's SOLR deployment exactly because operating the old
+stack under continuous change missed the SLA). The immutable ``QACIndex``
+is the wrong structure for that: every insert would re-sort the docid
+space. This module is the classic LSM-shaped answer:
+
+  * ``DeltaIndex`` — a tiny, uncompressed, host-resident tier. Inserts are
+    O(row) appends: term ids come from the CURRENT generation's (front-
+    coded-compatible) ``TermDictionary`` — an id here means exactly what it
+    means in the immutable tier, so one parse serves both — and postings
+    are APPEND-ONLY per-term entry-id lists (scores may be rewritten in
+    place by a later trend bump; list structure only ever grows).
+  * ``MainCorpusView`` — the host mirror of the immutable generation the
+    delta shadows: completion-string <-> docid <-> score maps built from
+    the index arrays themselves (no ordering assumptions on the corpus),
+    used for shadow detection at insert and for the merge/oracle layers in
+    ``serve.freshness``.
+
+Exactness contract (the whole point): the visible state after any prefix of
+inserts must answer bit-identically to a from-scratch ``build_qac_index``
+over (base corpus + those inserts). ``build_corpus`` dedups completions
+with MAX score, so the delta mirrors that algebra at insert time:
+
+  * a completion already in the main tier with ``score <= main score`` is a
+    **noop** (the from-scratch build would keep the main copy);
+  * with ``score > main score`` it becomes a **shadow** entry — the entry
+    remembers the main docid it outranks, and the merge layer suppresses
+    the main tier's copy (the from-scratch build would keep only the new
+    score);
+  * a completion already in the delta keeps the max of both scores
+    (**update** — in place, never a second entry);
+  * a completion with an out-of-vocabulary term is **deferred**: the
+    current dictionary cannot assign it ids, so it is buffered for the
+    next rebuild (which re-runs the full builder over base + delta +
+    deferred) and is NOT part of the visible state until the swap. Same
+    for completions the builder itself would drop (empty / too many
+    terms -> **dropped**, not even deferred).
+
+Lookup (``topk``) mirrors the engines' match rule verbatim — every prefix
+term present in the completion's term set and >= 1 term in the suffix's
+``[lo, hi)`` dictionary range — and returns entries in (score desc, token
+tuple asc) order, which is exactly the (-score, lexicographic row) docid
+order a from-scratch build would assign. ``upto`` replays any historical
+prefix of the insert log, which is what makes the time-indexed parity
+oracle (serve/freshness.py) cheap to state.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+
+import numpy as np
+
+from .builder import QACIndex, tokenize
+from .types import MAX_TERMS
+
+
+class MainCorpusView:
+    """Host mirror of one immutable generation: string/docid/score maps.
+
+    Built from the index arrays themselves (``fwd_terms`` + the dictionary's
+    char rows), not from any assumed alignment between the builder's
+    ``kept`` list and docid order — so it stays correct for any corpus.
+    """
+
+    def __init__(self, qidx: QACIndex, kept, scores):
+        self.qidx = qidx
+        self.kept = list(kept)
+        self.scores = np.asarray(scores, dtype=np.float64)
+        if len(self.kept) != len(self.scores):
+            raise ValueError(f"{len(self.kept)} kept strings vs "
+                             f"{len(self.scores)} scores")
+        score_by_string = dict(zip(self.kept, self.scores))
+        # decode each unique term once (V decodes), then join per docid
+        chars = np.asarray(qidx.dictionary.chars)
+        term_str = [""] + [
+            bytes(r).rstrip(b"\x00").decode("utf-8", errors="replace")
+            for r in chars]
+        # host-side term -> 1-based id (the dictionary's own `id_of` runs a
+        # per-call device binary search — ~ms, ruinous on the insert path)
+        self.term_id = {s: i for i, s in enumerate(term_str) if i > 0}
+        fwd = np.asarray(qidx.completions.fwd_terms)
+        self.string_of_docid: list[str] = []
+        self.tokens_of_docid: list[tuple] = []
+        for row in fwd:
+            toks = tuple(term_str[t] for t in row if t)
+            self.tokens_of_docid.append(toks)
+            self.string_of_docid.append(" ".join(toks))
+        self.score_of_docid = np.asarray(
+            [score_by_string[s] for s in self.string_of_docid],
+            dtype=np.float64)
+        self.docid_of_string = {s: d for d, s in
+                                enumerate(self.string_of_docid)}
+
+    def lookup(self, canonical: str):
+        """canonical completion string -> (docid, score) or None."""
+        d = self.docid_of_string.get(canonical)
+        if d is None:
+            return None
+        return d, float(self.score_of_docid[d])
+
+
+@dataclasses.dataclass
+class DeltaEntry:
+    """One applied insert: the completion under the current generation's
+    term ids, its score history, and the main docid it shadows (-1 =
+    a genuinely new completion).
+
+    ``born`` is the delta sequence number at which this entry became
+    visible; ``hist`` is its (seq, score) history — a later trend bump
+    rewrites the score IN PLACE structurally but appends to the history,
+    so any historical sequence number replays the exact score it saw.
+    """
+
+    query: str               # canonical " ".join(tokens)
+    tokens: tuple            # token tuple — the cross-dictionary tie-break
+    row: np.ndarray          # int32[max_terms] 1-based ids, 0 pad
+    born: int                # seq at which the entry became visible
+    hist: list               # [(seq, score)] ascending, never empty
+    shadow_docid: int        # main docid outranked by this entry, or -1
+
+    @property
+    def score(self) -> float:
+        return self.hist[-1][1]
+
+    def score_at(self, seq: int) -> float:
+        for s, sc in reversed(self.hist):
+            if s <= seq:
+                return sc
+        raise ValueError(f"entry born at seq {self.born} queried at {seq}")
+
+
+class DeltaIndex:
+    """Append-only in-memory delta tier over one ``MainCorpusView``.
+
+    ``seq`` counts VISIBLE state changes: it bumps on every applied entry
+    and on every in-place score raise of an existing entry (the two insert
+    outcomes the from-scratch oracle can observe), and ``oplog`` records
+    the (query, score) of each bump. Visible state ``(generation, seq)``
+    therefore means "the generation's base corpus with ``oplog[:seq]``
+    replayed under the builder's max-score dedup", and every read API
+    takes ``upto=seq`` to reproduce that state exactly — entries born
+    later are filtered out, earlier entries report ``score_at(seq)``.
+    """
+
+    def __init__(self, view: MainCorpusView, *, capacity: int = 4096,
+                 max_terms: int = MAX_TERMS):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.view = view
+        self.capacity = capacity
+        self.max_terms = max_terms
+        self.entries: list[DeltaEntry] = []
+        self.rows = np.zeros((capacity, max_terms), dtype=np.int32)
+        self.scores = np.zeros(capacity, dtype=np.float64)
+        # append-only postings: term id -> entry ids, in insertion order
+        # (ascending by construction — the "docid order" of the delta tier
+        # is (score, tokens), recomputed at read time over the tiny tier,
+        # but the postings themselves never reorder)
+        self.postings: dict[int, list[int]] = {}
+        self.by_query: dict[str, int] = {}
+        self.shadow_docids: list[int] = []   # grows with shadow entries
+        self.deferred: list[tuple[str, float]] = []   # OOV: next rebuild
+        self.seq = 0                          # visible-state version counter
+        self.oplog: list[tuple[str, float]] = []      # one row per seq bump
+        self._born: list[int] = []            # born seq per entry (ascending)
+        self._stats = {"applied": 0, "updated": 0, "noop": 0,
+                       "deferred": 0, "dropped": 0}
+
+    @property
+    def n(self) -> int:
+        return len(self.entries)
+
+    def _n_visible(self, seq: int) -> int:
+        """Entries born at or before ``seq`` — a PREFIX of the entry list,
+        because born values are assigned in append order."""
+        return bisect.bisect_right(self._born, seq)
+
+    # -- writes ---------------------------------------------------------------
+    def insert(self, query: str, score: float) -> str:
+        """Absorb one observed completion; returns the outcome kind:
+        ``"applied"`` (new visible entry), ``"updated"`` (an existing delta
+        entry's score rose in place), ``"noop"`` (main tier already
+        outranks it), ``"deferred"`` (OOV term, buffered for the next
+        rebuild), or ``"dropped"`` (the builder itself would discard it).
+        Raises ``OverflowError`` when the delta is full — the caller
+        (``GenerationalQAC``) rebuilds and swaps before that can happen.
+        """
+        score = float(score)
+        toks = tokenize(query)
+        if not toks or len(toks) > self.max_terms:
+            self._stats["dropped"] += 1
+            return "dropped"
+        canonical = " ".join(toks)
+        prev = self.by_query.get(canonical)
+        if prev is not None:
+            if score > self.entries[prev].score:
+                # in-place score raise: max-dedup, never a second entry —
+                # but a VISIBLE change, so it gets its own seq + oplog row
+                self.seq += 1
+                self.oplog.append((canonical, score))
+                self.entries[prev].hist.append((self.seq, score))
+                self.scores[prev] = score
+                self._stats["updated"] += 1
+                return "updated"
+            self._stats["noop"] += 1
+            return "noop"
+        main = self.view.lookup(canonical)
+        if main is not None and score <= main[1]:
+            self._stats["noop"] += 1
+            return "noop"
+        ids = [self.view.term_id.get(t, 0) for t in toks]
+        if any(i == 0 for i in ids):
+            # out-of-vocabulary term: the current dictionary cannot name
+            # it, so it waits for the rebuild (which re-runs the builder
+            # over base + delta + deferred and mints the new term ids)
+            self.deferred.append((canonical, score))
+            self._stats["deferred"] += 1
+            return "deferred"
+        if self.n >= self.capacity:
+            raise OverflowError(
+                f"delta full ({self.capacity} entries); rebuild and swap")
+        eid = self.n
+        row = np.zeros(self.max_terms, dtype=np.int32)
+        row[: len(ids)] = ids
+        shadow = main[0] if main is not None else -1
+        self.seq += 1
+        self.oplog.append((canonical, score))
+        self.entries.append(DeltaEntry(query=canonical, tokens=tuple(toks),
+                                       row=row, born=self.seq,
+                                       hist=[(self.seq, score)],
+                                       shadow_docid=shadow))
+        self._born.append(self.seq)
+        self.rows[eid] = row
+        self.scores[eid] = score
+        for t in sorted(set(ids)):
+            self.postings.setdefault(t, []).append(eid)
+        if shadow >= 0:
+            self.shadow_docids.append(shadow)
+        self.by_query[canonical] = eid
+        self._stats["applied"] += 1
+        return "applied"
+
+    # -- reads ----------------------------------------------------------------
+    def shadowed(self, upto: int | None = None) -> set[int]:
+        """Main docids outranked by the state at sequence ``upto``."""
+        nv = self._n_visible(self.seq if upto is None else upto)
+        return {e.shadow_docid for e in self.entries[:nv]
+                if e.shadow_docid >= 0}
+
+    def _candidates(self, pids, plen: int, n_vis: int) -> np.ndarray:
+        """Entry ids that can possibly match: the append-only postings of
+        the rarest prefix term when there is one, else everything live."""
+        if plen <= 0:
+            return np.arange(n_vis, dtype=np.int64)
+        lists = [np.asarray(self.postings.get(int(t), ()), dtype=np.int64)
+                 for t in set(int(x) for x in pids[:plen])]
+        cand = min(lists, key=len)
+        return cand[cand < n_vis]
+
+    def matches(self, pids, plen: int, lo: int, hi: int,
+                upto: int | None = None) -> list[int]:
+        """Entry ids matching the engines' rule — every prefix term present
+        AND >= 1 term in [lo, hi) — in (score desc, tokens asc) order at
+        sequence ``upto``, i.e. exactly the (-score, lexicographic row)
+        docid order a from-scratch build of that state would assign."""
+        seq = self.seq if upto is None else upto
+        n_vis = self._n_visible(seq)
+        if n_vis <= 0 or hi <= lo:
+            return []
+        pids = np.asarray(pids, dtype=np.int64)
+        if plen > 0 and bool((pids[:plen] == 0).any()):
+            return []                       # engines reject unknown prefix terms
+        cand = self._candidates(pids, plen, n_vis)
+        if cand.size == 0:
+            return []
+        rows = self.rows[cand]                                    # [C, M]
+        keep = ((rows >= lo) & (rows < hi)).any(axis=1)
+        for t in set(int(x) for x in pids[:plen]):
+            keep &= (rows == t).any(axis=1)
+        hit = cand[keep]
+        return sorted((int(i) for i in hit),
+                      key=lambda i: (-self.entries[i].score_at(seq),
+                                     self.entries[i].tokens))
+
+    def topk(self, pids, plen: int, lo: int, hi: int, k: int,
+             upto: int | None = None) -> list[int]:
+        return self.matches(pids, plen, lo, hi, upto)[:k]
+
+    # -- rebuild handoff ------------------------------------------------------
+    def fold_corpus(self) -> tuple[list[str], list[float]]:
+        """(queries, scores) to append to the base corpus at rebuild:
+        every applied entry plus the deferred OOV buffer. ``build_corpus``'s
+        max-dedup makes re-stating a shadow harmless by construction."""
+        qs = [e.query for e in self.entries] + [q for q, _ in self.deferred]
+        sc = [e.score for e in self.entries] + [s for _, s in self.deferred]
+        return qs, sc
+
+    def stats(self) -> dict:
+        return dict(self._stats, n=self.n, seq=self.seq,
+                    deferred_pending=len(self.deferred),
+                    shadows=len(self.shadow_docids))

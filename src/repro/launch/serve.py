@@ -22,6 +22,17 @@ post-failover service:
 
   PYTHONPATH=src python -m repro.launch.serve --online --cluster 2 \
       --queries 3000 --sessions 64 [--drill] [--check]
+
+Freshness mode (ISSUE 9) replays keystroke traffic interleaved with live
+corpus mutations (inserts + trend spikes) through the generational serving
+layer (serve/freshness.py): delta-tier absorption, exact k-way merge, and
+rebuild-and-swap mid-trace; ``--check`` asserts time-indexed bit-parity of
+every sampled answer against a from-scratch rebuild at its visible
+(generation, seq) version, at least one swap, exactly-once cache
+invalidation per swap, and nonzero delta-tier hits:
+
+  PYTHONPATH=src python -m repro.launch.serve --freshness --queries 3000 \
+      --sessions 32 [--mutations 24] [--swap-threshold 8] [--check]
 """
 from __future__ import annotations
 
@@ -151,6 +162,63 @@ def run_cluster(args, qidx, kept) -> None:
               + (f", {s['rerouted']} re-routed" if args.drill else ""))
 
 
+def run_freshness(args, kept, kscores) -> None:
+    """``kept``/``kscores`` are the canonical deduped corpus from the base
+    build — the mutation trace draws targets (and trend spikes' old
+    scores) from it, and the generational layer rebuilds from it."""
+    from repro.serve.freshness import FreshnessConfig, GenerationalQAC
+    from repro.text import MutationTraceConfig, generate_mutation_trace
+
+    n_mut = args.mutations
+    swap_thr = (args.swap_threshold if args.swap_threshold is not None
+                else max(2, n_mut // 3))
+    arch = QACArch(k=args.k)
+    fr_cfg = FreshnessConfig(
+        k=args.k,
+        delta_capacity=max(arch.freshness_delta_capacity, swap_thr),
+        swap_threshold=swap_thr)
+    rt_cfg = arch.runtime_config()
+    if args.max_batch is not None:
+        rt_cfg.max_batch = args.max_batch
+    if args.slack_us is not None:
+        rt_cfg.slack_us = args.slack_us
+    events = generate_mutation_trace(kept, kscores, MutationTraceConfig(
+        keystrokes=KeystrokeTraceConfig(
+            n_sessions=args.sessions, mean_keystroke_ms=args.keystroke_ms,
+            seed=0),
+        n_mutations=n_mut, seed=0))
+    n_req = sum(1 for e in events if e.kind == "request")
+    print(f"[serve] freshness trace: {n_req} requests + "
+          f"{len(events) - n_req} mutations, swap_threshold={swap_thr}")
+    gq = GenerationalQAC(kept, kscores, cfg=fr_cfg, rt_cfg=rt_cfg)
+    results = gq.replay(events)
+    s = gq.snapshot()
+    rts = s["runtime"]
+    print(f"[serve] freshness: generation={s['generation']} "
+          f"swaps={s['n_swaps']} outcomes={s['mutation_outcomes']} "
+          f"delta_hit_answers={s['delta_hit_answers']} "
+          f"escalations={s['escalations']}")
+    print(f"[serve] freshness: apply_p99={s['apply_p99_us']:.0f}us "
+          f"swap_stall_p99={s['swap_stall_p99_us']/1e3:.1f}ms "
+          f"rebuilds={[f'{r/1e3:.0f}ms' for r in s['rebuild_wall_us']]} "
+          f"hit_rate={rts['cache_hit_rate']:.2f}")
+    print(f"[serve] freshness: per_generation={rts['per_generation']} "
+          f"invalidations={rts['invalidations']}")
+    if args.check:
+        assert s["n_swaps"] >= 1, "trace produced no generation swap"
+        assert s["delta_hit_answers"] > 0, \
+            "no answer was served from the delta tier"
+        for key, inv in rts["invalidations"].items():
+            assert inv["count"] == 1, \
+                f"swap {key} invalidated caches {inv['count']} times"
+        assert len(rts["invalidations"]) == s["n_swaps"], \
+            "each swap must invalidate the cache tiers exactly once"
+        n = gq.check_parity(results, sample_every=max(1, len(results) // 200))
+        print(f"[serve] freshness check OK: {n} sampled answers bit-identical"
+              f" to from-scratch rebuilds at their visible versions, "
+              f"{s['n_swaps']} swaps each invalidating caches exactly once")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--queries", type=int, default=20_000)
@@ -185,6 +253,18 @@ def main():
     ap.add_argument("--drill", action="store_true",
                     help="--cluster only: kill replica 0 mid-trace and "
                          "exercise detection/failover/re-admission")
+    ap.add_argument("--freshness", action="store_true",
+                    help="replay keystroke traffic + live corpus mutations "
+                         "through the generational serving layer "
+                         "(serve/freshness.py): delta tier, k-way merge, "
+                         "mid-trace rebuild-and-swap")
+    ap.add_argument("--mutations", type=int, default=24,
+                    help="--freshness: mutation events (inserts + trend "
+                         "spikes) interleaved into the trace")
+    ap.add_argument("--swap-threshold", type=int, default=None,
+                    help="--freshness: visible delta changes before a "
+                         "rebuild-and-swap (default: ~mutations/3, so a "
+                         "default trace swaps at least once)")
     args = ap.parse_args()
 
     print(f"[serve] generating {args.queries} synthetic scored queries ...")
@@ -195,6 +275,10 @@ def main():
     print(f"[serve] built index in {time.time()-t0:.1f}s: "
           f"{stats.n_queries} completions, {stats.n_unique_terms} terms, "
           f"{stats.avg_terms_per_query:.2f} terms/query")
+
+    if args.freshness:
+        run_freshness(args, kept, scores)
+        return
 
     if args.online:
         if args.cluster > 0:

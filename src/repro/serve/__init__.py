@@ -1,3 +1,28 @@
+"""QAC serving stack, bottom to top (each layer only knows the one below):
+
+  frontend   (frontend.py)  — batch-in/batch-out routed engine dispatch:
+                              class routing (single vs conjunctive), pow2
+                              batch/k buckets, per-variant jit cache.
+  runtime    (runtime.py)   — ONE replica: deadline-aware micro-batching
+                              over individually-arriving keystrokes, plus
+                              the generation-tagged exact-prefix LRU and
+                              session-filter cache tiers.
+  cluster    (cluster.py)   — N replicas behind session-affinity dispatch:
+                              SLA admission ladder, heartbeat failover,
+                              cluster-wide generation swap propagation.
+  freshness  (freshness.py) — live index updates: the in-memory delta
+                              tier merged exactly over the immutable main
+                              index per answer, and the rebuild-and-swap
+                              path minting new generations under a
+                              monotone generation id.
+
+Correctness is one invariant all the way up: every fast path answers
+bit-identically to its in-tree oracle — the engines to the host reference,
+the runtime/cluster rows to an uncached frontend of the generation that
+answered (``check_cluster_parity_timed``), and merged freshness answers to
+a from-scratch build of their visible (generation, seq) version
+(``GenerationalQAC.check_parity``).
+"""
 from .qac import (  # noqa: F401
     qac_serve_step,
     qac_serve_step_vmap,
@@ -22,6 +47,12 @@ from .cluster import (  # noqa: F401
     QACServingCluster,
     assign_sla,
     check_cluster_parity,
+    check_cluster_parity_timed,
     rendezvous_route,
+)
+from .freshness import (  # noqa: F401
+    FreshnessConfig,
+    FreshResult,
+    GenerationalQAC,
 )
 from .lm import prefill_step, make_decode_step  # noqa: F401

@@ -189,6 +189,10 @@ class ClusterResult:
     degraded: bool
     rerouted: bool
     reason: str = ""
+    # freshness (ISSUE 9): the index generation whose frontend answered —
+    # the time-indexed parity oracle replays each row against a
+    # from-scratch build of exactly this generation
+    gen: int = 0
 
 
 class ClusterTelemetry:
@@ -208,6 +212,8 @@ class ClusterTelemetry:
         self.per_replica: Counter = Counter()   # rid -> served count
         self.deaths: list[tuple[float, int]] = []
         self.readmissions: list[tuple[float, int]] = []
+        # freshness: one (t_us, generation) entry per cluster-wide swap
+        self.swaps: list[tuple[float, int]] = []
 
     @staticmethod
     def _pct(lat) -> dict:
@@ -235,6 +241,7 @@ class ClusterTelemetry:
             "per_replica": dict(sorted(self.per_replica.items())),
             "deaths": list(self.deaths),
             "readmissions": list(self.readmissions),
+            "swaps": list(self.swaps),
         }
         for cls, lat in self.lat_us.items():
             for key, v in self._pct(lat).items():
@@ -506,9 +513,40 @@ class QACServingCluster:
             self._results[idx] = ClusterResult(
                 status=SERVED, row=row, k_served=int(row.shape[0]),
                 replica=rep.rid, sla=meta["sla"], degraded=meta["degraded"],
-                rerouted=meta["rerouted"])
+                rerouted=meta["rerouted"],
+                gen=rt.done_gen.get(idx, rt.generation))
         rt._results.clear()
         rt.done_t_us.clear()
+        rt.done_path.clear()
+        rt.done_gen.clear()
+
+    def propagate_swap(self, generation: int,
+                       frontends: list[QACFrontend], *, t_us: float = 0.0):
+        """Cluster-wide generation swap: for every replica, flush its
+        runtime queue (queued requests were admitted against the old
+        generation and must be answered by it), harvest the finished rows
+        with their old-generation tag, then install the new frontend —
+        which invalidates both cache tiers exactly once per replica.
+        ``frontends`` follows the constructor's contract (one per replica,
+        or a shared warm instance repeated)."""
+        if len(frontends) != self.cfg.n_replicas:
+            raise ValueError(f"{len(frontends)} frontends for "
+                             f"{self.cfg.n_replicas} replicas")
+        self._now = max(self._now, t_us)
+        for rep, fe in zip(self.replicas, frontends):
+            if self.injector.down(rep.rid, self._now) is None:
+                rep.runtime.drain()
+            else:
+                # a down replica cannot serve its old-generation queue; park
+                # the requests in limbo (recovery/failover re-admits them
+                # against whatever generation then serves, with original k)
+                rep.limbo.extend(self._drain_queue(rep))
+            self._harvest(rep)
+            rep.runtime.install_generation(generation, fe)
+        # reset() builds replicas from self.frontends — keep it current so
+        # a post-swap reset restarts on the NEW generation
+        self.frontends = list(frontends)
+        self.telemetry.swaps.append((self._now, generation))
 
     def drain(self):
         """End of trace: advance past the heartbeat timeout so any
@@ -564,28 +602,56 @@ class QACServingCluster:
         return sla
 
 
-def check_cluster_parity(frontend: QACFrontend, reqs: list[QACRequest],
-                         results: list[ClusterResult]) -> int:
-    """Assert the fault-drill correctness gate: every served (non-REJECTED)
-    result row is bit-identical to the uncached frontend oracle at its
-    served k — the first ``k_served`` entries of the full-k answer, by
+def check_cluster_parity_timed(frontends_by_gen: dict,
+                               reqs: list[QACRequest],
+                               results: list[ClusterResult]) -> int:
+    """The time-indexed parity oracle (ISSUE 9): every served result row
+    must be bit-identical to the uncached frontend of the generation that
+    ANSWERED it (``ClusterResult.gen``), truncated to its served k — the
+    first ``k_served`` entries of that generation's full-k answer, by
     prefix-stable top-k. Returns the number of rows checked.
 
-    ``run_naive_trace`` rows work as the oracle too; this helper exists so
-    tests, the launcher smoke, and the bench all assert the same contract
-    through one code path.
+    ``frontends_by_gen`` maps generation id -> a ``QACFrontend`` over a
+    from-scratch build of that generation's corpus. A request that crossed
+    a swap (admitted under gen g, answered under g+1 — e.g. re-routed out
+    of a dead replica) is checked against the generation that actually
+    produced its docids; an unknown generation in the results is a hard
+    failure, not a skip.
     """
     checked = 0
     for r, res in zip(reqs, results):
         if res.status != SERVED:
             continue
-        want = np.asarray(frontend.complete(
+        if res.gen not in frontends_by_gen:
+            raise AssertionError(
+                f"request {r.idx} answered by unknown generation {res.gen} "
+                f"(oracle has {sorted(frontends_by_gen)})")
+        fe = frontends_by_gen[res.gen]
+        want = np.asarray(fe.complete(
             r.pids[None], np.asarray([r.plen], np.int32), r.suf[None],
             np.asarray([r.slen], np.int32), k=r.k))[0]
         np.testing.assert_array_equal(
             res.row, want[: res.k_served],
             err_msg=(f"cluster parity break at request {r.idx} "
                      f"({r.query!r}, k_served={res.k_served}, "
-                     f"replica={res.replica}, rerouted={res.rerouted})"))
+                     f"replica={res.replica}, rerouted={res.rerouted}, "
+                     f"gen={res.gen})"))
         checked += 1
     return checked
+
+
+def check_cluster_parity(frontend: QACFrontend, reqs: list[QACRequest],
+                         results: list[ClusterResult]) -> int:
+    """Assert the fault-drill correctness gate: every served (non-REJECTED)
+    result row is bit-identical to the uncached frontend oracle at its
+    served k. The single-generation view of ``check_cluster_parity_timed``
+    (one code path): every generation the results mention maps to the one
+    frontend, which is exact whenever the cluster never swapped.
+
+    ``run_naive_trace`` rows work as the oracle too; this helper exists so
+    tests, the launcher smoke, and the bench all assert the same contract
+    through one code path.
+    """
+    gens = {res.gen for res in results if res.status == SERVED}
+    return check_cluster_parity_timed({g: frontend for g in gens or {0}},
+                                      reqs, results)

@@ -1,0 +1,517 @@
+"""Generational QAC serving: delta tier + exact k-way merge + atomic swap
+(ISSUE 9 tentpole).
+
+``GenerationalQAC`` is the freshness layer over the whole serving stack:
+it owns a chain of immutable index *generations* (each a full
+``build_qac_index`` artifact with its warmed ``QACFrontend``), the current
+generation's ``core.delta.DeltaIndex`` absorbing live inserts, and ONE
+``QACOnlineRuntime`` whose caches carry the generation tag. Three moving
+parts:
+
+  * **k-way merge serving** — every answered request is merged on the host
+    from two sorted streams: the main tier's engine row (k smallest
+    matching docids, which IS (-score, lexicographic-row) order) and the
+    delta tier's matches at the request's visible sequence number. Merge
+    key: ``(-score, token tuple)`` — term ids are lexicographic ranks, so
+    comparing token tuples compares term rows, and the key survives
+    dictionary regeneration across generations. Shadowed main docids
+    (delta raised their score) are suppressed; the same completion
+    re-enters from the delta stream. INF-padding semantics are preserved:
+    fewer than k visible matches -> the answer is padded.
+
+    The merge is *provably* exact per answer: the engine row's fetch
+    horizon is its deepest examined docid, and every unfetched main match
+    sorts strictly after it. If the merged k-th item does not sort at or
+    before the horizon (delta entries displaced main items past it, or
+    shadows consumed fetched slots), the layer ESCALATES — re-fetches the
+    main tier at the next pow2 k (pow2 ks share the frontend's jit
+    variants) until the bound holds or the tier is exhausted. Multi-term
+    requests whose conjunctive driver scan would truncate
+    (``tile * max_tiles``) skip the engine row and take a host-exact scan
+    of the generation's forward index instead, so merged answers are true
+    top-k even where the engine's budget is not.
+
+  * **generation-tagged caches (cache-below-merge)** — the runtime's LRU
+    and session tiers sit BELOW the merge and hold main-tier rows only.
+    A main row is valid for the entire generation (the immutable tier
+    never changes), so inserts never invalidate anything; the delta is
+    merged on top at answer time with the request's own visible sequence
+    number. A generation swap invalidates both tiers exactly once
+    (``QACOnlineRuntime.install_generation``), extending the PR 4 cache
+    exactness proofs to "exact w.r.t. the generation that answered".
+
+  * **rebuild-and-swap** — when the delta reaches ``swap_threshold``
+    visible changes, the delta folds into a fresh immutable build
+    (``build_qac_index`` over base + applied entries + deferred OOV — the
+    same builder, so the new generation is bit-identical to a from-scratch
+    build by construction), the new frontend pre-warms its jit variants,
+    and the swap itself is only: drain the runtime (queued requests were
+    admitted against the old generation and must be answered by it),
+    absorb their answers at the old version, install the new frontend
+    under the next monotone generation id. ``swap_log`` records the
+    background rebuild wall time and the (much smaller) swap stall
+    separately.
+
+Visible version = ``(generation, seq)``: a request's answer reflects the
+generation installed when it was answered plus the first ``seq`` visible
+delta changes. The time-indexed oracle (``oracle_answer`` /
+``check_parity``) rebuilds that exact corpus from scratch per distinct
+version and asserts every answer matches it — the freshness extension of
+the repo's parity-oracle discipline. Event ordering makes the version
+well-defined: a mutation first ticks the runtime clock (deadline
+dispatches for earlier arrivals fire first, at the pre-mutation state),
+then pending answers are absorbed, then the mutation applies.
+
+Answers are completion STRINGS (k-tuples, None-padded), not docids —
+docids are generation-local names and do not survive a swap; strings are
+the stable identity the oracle can compare across builds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import Counter, deque
+
+import numpy as np
+
+from ..core.builder import build_qac_index, parse_queries
+from ..core.delta import DeltaIndex, MainCorpusView
+from ..core.types import INF_DOCID
+from .frontend import QACFrontend
+from .runtime import (QACOnlineRuntime, QACRequest, RuntimeConfig,
+                      prepare_requests)
+
+
+@dataclasses.dataclass
+class FreshnessConfig:
+    """Delta-tier + swap knobs, validated at construction like
+    ``RuntimeConfig``/``ClusterConfig``. ``swap_threshold`` counts VISIBLE
+    delta changes (applied inserts + in-place score raises); it must fit
+    inside ``delta_capacity`` so the delta can never overflow between
+    swaps, and the capacity must hold at least one full answer."""
+
+    k: int = 10
+    delta_capacity: int = 4096
+    swap_threshold: int = 1024
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.delta_capacity < self.k:
+            raise ValueError(
+                f"delta_capacity ({self.delta_capacity}) must be >= k "
+                f"({self.k}) — the delta alone may have to fill an answer")
+        if not 1 <= self.swap_threshold <= self.delta_capacity:
+            raise ValueError(
+                f"swap_threshold ({self.swap_threshold}) must be in "
+                f"[1, delta_capacity={self.delta_capacity}]")
+
+
+@dataclasses.dataclass
+class _Generation:
+    """One immutable tier: its build artifacts, host mirrors, warmed
+    frontend, and the delta absorbing inserts while it is current."""
+
+    gen: int
+    qidx: object
+    kept: list
+    scores: np.ndarray
+    view: MainCorpusView
+    frontend: QACFrontend
+    delta: DeltaIndex
+    fwd: np.ndarray          # host forward index [N, M] for exact scans
+
+
+@dataclasses.dataclass
+class FreshResult:
+    """One merged answer. ``strings``/``scores`` are k-tuples (None/0.0
+    padded); ``gen``/``seq`` is the visible version the answer reflects
+    (what the oracle rebuilds); ``n_delta`` counts items served from the
+    delta tier; ``path`` is the runtime cache path of the main-tier row."""
+
+    idx: int
+    query: str
+    k: int
+    gen: int
+    seq: int
+    strings: tuple
+    scores: tuple
+    path: str
+    n_delta: int
+    escalations: int
+    lat_us: float
+
+
+class GenerationalQAC:
+    """The freshness subsystem (module docstring): generations + delta +
+    merge over one generation-tagged ``QACOnlineRuntime``."""
+
+    def __init__(self, queries, scores, *, cfg: FreshnessConfig | None = None,
+                 rt_cfg: RuntimeConfig | None = None,
+                 frontend_kwargs: dict | None = None,
+                 postings_codec: str | None = "ef"):
+        self.cfg = cfg if cfg is not None else FreshnessConfig()
+        self.rt_cfg = rt_cfg if rt_cfg is not None else RuntimeConfig()
+        self._postings_codec = postings_codec
+        self._fe_kwargs = dict(specialize_list_pad=False)
+        self._fe_kwargs.update(frontend_kwargs or {})
+        qidx, kept, sc = build_qac_index(
+            list(queries), list(scores), k_default=self.cfg.k,
+            postings_codec=postings_codec)
+        self._g0 = self._make_generation(0, qidx, kept, sc,
+                                         QACFrontend(qidx, **self._fe_kwargs))
+        self.reset()
+
+    def _make_generation(self, gen, qidx, kept, sc, fe) -> _Generation:
+        view = MainCorpusView(qidx, kept, sc)
+        return _Generation(
+            gen=gen, qidx=qidx, kept=list(kept),
+            scores=np.asarray(sc, np.float64), view=view, frontend=fe,
+            delta=DeltaIndex(view, capacity=self.cfg.delta_capacity),
+            fwd=np.asarray(qidx.completions.fwd_terms))
+
+    def reset(self):
+        """Fresh serving state back at generation 0 (measured-replay
+        protocol); generation 0's warm frontend jit cache survives."""
+        g0 = self._g0
+        self.history: dict[int, _Generation] = {
+            0: self._make_generation(0, g0.qidx, g0.kept, g0.scores,
+                                     g0.frontend)}
+        self.rt = QACOnlineRuntime(g0.frontend, self.rt_cfg)
+        self.answers: dict[int, FreshResult] = {}
+        self._req_by_idx: dict[int, QACRequest] = {}
+        self._recent: deque = deque(maxlen=64)   # warm fodder for swaps
+        self.apply_log: list[dict] = []
+        self.swap_log: list[dict] = []
+        self._oracle_cache: dict[tuple[int, int], tuple] = {}
+
+    def _cur(self) -> _Generation:
+        return self.history[self.rt.generation]
+
+    # -- merge ----------------------------------------------------------------
+    @staticmethod
+    def _scan_exact_gen(g: _Generation, r: QACRequest) -> bool:
+        """Mirror of ``QACOnlineRuntime._scan_exact`` against generation
+        g's own posting lists (the request was parsed under g, so its term
+        ids index g's lists, not whatever is installed now)."""
+        if r.plen == 0:
+            return True
+        ll = g.frontend._list_lens
+        terms = np.clip(r.pids[: r.plen], 0, len(ll) - 1)
+        return int(ll[terms].min()) <= g.frontend.tile * g.frontend.max_tiles
+
+    def _main_key(self, g: _Generation, d: int) -> tuple:
+        return (-float(g.view.score_of_docid[d]), g.view.tokens_of_docid[d])
+
+    def _merge(self, g: _Generation, r: QACRequest, row: np.ndarray,
+               seq: int):
+        """Merge the main-tier row with the delta at sequence ``seq`` into
+        the exact top-k (strings, scores, n_delta, escalations)."""
+        delta = g.delta
+        d_ids = delta.matches(r.pids, r.plen, r.lo, r.hi, upto=seq)
+        d_items = [(-delta.entries[i].score_at(seq), delta.entries[i].tokens,
+                    delta.entries[i].query) for i in d_ids]
+        shadowed = delta.shadowed(seq)
+        escalations = 0
+        if not self._scan_exact_gen(g, r):
+            # the engine's conjunctive driver scan would truncate on this
+            # request: take the host-exact scan of g's forward index so the
+            # merged answer is true top-k regardless of the engine budget
+            rows = g.fwd
+            keep = ((rows >= r.lo) & (rows < r.hi)).any(axis=1)
+            for t in set(int(x) for x in r.pids[: r.plen]):
+                keep &= (rows == t).any(axis=1)
+            fetched = np.nonzero(keep)[0].tolist()
+            exhausted = True
+            escalations = -1            # sentinel: host-exact path taken
+        else:
+            fetched = [int(d) for d in row if d != INF_DOCID]
+            exhausted = len(fetched) < len(row)
+        kprime = max(r.k, 1)
+        n_main = int(g.view.score_of_docid.shape[0])
+        while True:
+            m_items = [self._main_key(g, d) + (g.view.string_of_docid[d],)
+                       for d in fetched if d not in shadowed]
+            merged = sorted(d_items + m_items)
+            if exhausted:
+                break
+            horizon = self._main_key(g, fetched[-1]) if fetched else None
+            if (len(merged) >= r.k
+                    and (horizon is None
+                         or merged[r.k - 1][:2] <= horizon)):
+                break
+            # escalate: deeper main fetch at the next pow2 k
+            escalations += 1
+            kprime = max(kprime * 2, 2)
+            kprime = 1 << (kprime - 1).bit_length()
+            out = np.asarray(g.frontend.complete(
+                r.pids[None], np.asarray([r.plen], np.int32), r.suf[None],
+                np.asarray([r.slen], np.int32), k=min(kprime, n_main)))[0]
+            fetched = [int(d) for d in out if d != INF_DOCID]
+            exhausted = len(fetched) < out.shape[0] or kprime >= n_main
+        top = merged[: r.k]
+        strings = tuple(t[2] for t in top) + (None,) * (r.k - len(top))
+        scs = tuple(-t[0] for t in top) + (0.0,) * (r.k - len(top))
+        n_delta = sum(1 for t in top if t[:2] in
+                      {(s, tk) for s, tk, _ in d_items})
+        return strings, scs, n_delta, max(escalations, 0)
+
+    def _absorb(self):
+        """Move finished runtime rows into merged answers at the CURRENT
+        visible version (absorb always runs before a mutation applies or a
+        swap installs, so "current" is exactly what those rows saw)."""
+        rt = self.rt
+        if not rt._results:
+            return
+        for idx, row in rt._results.items():
+            r = self._req_by_idx.pop(idx)
+            g = self.history[rt.done_gen[idx]]
+            seq = g.delta.seq
+            strings, scs, n_delta, esc = self._merge(g, r, row, seq)
+            self.answers[idx] = FreshResult(
+                idx=idx, query=r.query, k=r.k, gen=g.gen, seq=seq,
+                strings=strings, scores=scs, path=rt.done_path[idx],
+                n_delta=n_delta, escalations=esc,
+                lat_us=rt.done_t_us[idx] - r.t_us)
+        rt._results.clear()
+        rt.done_t_us.clear()
+        rt.done_path.clear()
+        rt.done_gen.clear()
+
+    # -- mutations ------------------------------------------------------------
+    def insert(self, query: str, score: float, t_us: float = 0.0) -> str:
+        """Apply one live mutation at virtual time ``t_us``: tick the
+        runtime (deadline dispatches for earlier arrivals fire at the
+        pre-mutation state), absorb their answers, apply the insert, and
+        rebuild-and-swap if the delta crossed the threshold. Returns the
+        ``DeltaIndex.insert`` outcome kind."""
+        self.rt.tick(t_us)
+        self._absorb()
+        g = self._cur()
+        t0 = time.perf_counter()
+        out = g.delta.insert(query, score)
+        self.apply_log.append(dict(
+            t_us=float(t_us), outcome=out, gen=g.gen,
+            wall_us=(time.perf_counter() - t0) * 1e6))
+        if g.delta.seq >= self.cfg.swap_threshold:
+            self._rebuild_and_swap(t_us)
+        return out
+
+    def _warm_frontend(self, fe: QACFrontend):
+        """Pre-compile the new generation's jit variants from recent
+        traffic (pow2 sweep, both engine classes) — part of the BACKGROUND
+        rebuild cost, never the swap stall."""
+        good = [r for r in self._recent if not QACOnlineRuntime._is_bad(r)]
+        for rs in ([r for r in good if r.plen == 0],
+                   [r for r in good if r.plen > 0]):
+            if not rs:
+                continue
+            b = 1
+            while b <= max(self.rt_cfg.max_batch, 1):
+                take = [rs[i % len(rs)] for i in range(b)]
+                fe.complete(
+                    np.stack([r.pids for r in take]),
+                    np.asarray([r.plen for r in take], np.int32),
+                    np.stack([r.suf for r in take]),
+                    np.asarray([r.slen for r in take], np.int32),
+                    k=np.asarray([r.k for r in take], np.int32))
+                if b == self.rt_cfg.max_batch:
+                    break
+                b = min(b * 2, self.rt_cfg.max_batch)
+
+    def _rebuild_and_swap(self, t_us: float):
+        """Fold the delta into a fresh immutable build, then atomically
+        install it. The rebuild + new-frontend warm happen "in background"
+        (their wall time is ``rebuild_wall_us``); the swap stall is only
+        drain + absorb + install."""
+        g = self._cur()
+        t0 = time.perf_counter()
+        dq, ds = g.delta.fold_corpus()
+        qidx, kept, sc = build_qac_index(
+            g.kept + dq, list(g.scores) + ds, k_default=self.cfg.k,
+            postings_codec=self._postings_codec)
+        fe = QACFrontend(qidx, **self._fe_kwargs)
+        self._warm_frontend(fe)
+        rebuild_us = (time.perf_counter() - t0) * 1e6
+        t1 = time.perf_counter()
+        self.rt.drain()
+        self._absorb()                      # old-version answers, pre-swap
+        new_gen = g.gen + 1
+        self.history[new_gen] = self._make_generation(
+            new_gen, qidx, kept, sc, fe)
+        self.rt.install_generation(new_gen, fe)
+        stall_us = (time.perf_counter() - t1) * 1e6
+        self.swap_log.append(dict(
+            t_us=float(t_us), gen=new_gen, rebuild_wall_us=rebuild_us,
+            swap_stall_us=stall_us, folded=g.delta.n,
+            folded_seq=g.delta.seq, deferred=len(g.delta.deferred)))
+
+    # -- serving --------------------------------------------------------------
+    def _flush_requests(self, buf: list, k: int):
+        """Parse a run of buffered request events against the CURRENT
+        generation's dictionary and submit them in arrival order. Safe to
+        batch: between two mutations the runtime is driven purely by
+        ``submit`` at each request's own timestamp."""
+        if not buf:
+            return
+        g = self._cur()
+        reqs = parse_and_prepare(g.qidx, [(t, s, q) for _, t, s, q in buf],
+                                 k=k)
+        for (gidx, _, _, _), r in zip(buf, reqs):
+            r.idx = gidx
+            self._req_by_idx[gidx] = r
+            self._recent.append(r)
+            self.rt.submit(r)
+
+    def run_mutation_trace(self, events, *, k: int | None = None):
+        """Replay a mutation trace (``text.synth.generate_mutation_trace``
+        events or (t_us, kind, session, query, score) tuples) -> list of
+        ``FreshResult`` in request order."""
+        k = self.cfg.k if k is None else k
+        buf, req_order = [], []
+        last = -np.inf
+        for gidx, ev in enumerate(events):
+            t, kind, sess, q, sc = _norm_event(ev)
+            if t < last:
+                raise ValueError("trace must be sorted by event time")
+            last = t
+            if kind == "request":
+                buf.append((gidx, t, sess, q))
+                req_order.append(gidx)
+            elif kind in ("insert", "trend"):
+                self._flush_requests(buf, k)
+                buf = []
+                self.insert(q, sc, t)
+            else:
+                raise ValueError(f"unknown event kind {kind!r}")
+        self._flush_requests(buf, k)
+        self.rt.drain()
+        self._absorb()
+        missing = [i for i in req_order if i not in self.answers]
+        assert not missing, f"requests lost by freshness layer: {missing[:5]}"
+        return [self.answers[i] for i in req_order]
+
+    def replay(self, events, *, k: int | None = None, warm: bool = True):
+        """Measured-replay protocol (runtime/cluster shape): one full warm
+        pass compiles generation 0's variants and exercises every swap the
+        trace will perform, then reset + measured pass."""
+        if warm:
+            self.run_mutation_trace(events, k=k)
+            self.reset()
+        return self.run_mutation_trace(events, k=k)
+
+    def complete_batch(self, raw_queries, *, k: int | None = None):
+        """Batched merged path, no runtime/caches: parse + main-tier
+        ``frontend.complete`` + per-row delta merge at the current version.
+        The bench's merged-vs-immutable comparison point. Returns
+        list[tuple[str | None, ...]] of length k each."""
+        k = self.cfg.k if k is None else k
+        g = self._cur()
+        reqs = parse_and_prepare(
+            g.qidx, [(0.0, 0, q) for q in raw_queries], k=k)
+        out = np.asarray(g.frontend.complete(
+            np.stack([r.pids for r in reqs]),
+            np.asarray([r.plen for r in reqs], np.int32),
+            np.stack([r.suf for r in reqs]),
+            np.asarray([r.slen for r in reqs], np.int32), k=k))
+        seq = g.delta.seq
+        return [self._merge(g, r, out[i, : k], seq)[0]
+                for i, r in enumerate(reqs)]
+
+    # -- the time-indexed oracle ----------------------------------------------
+    def oracle_index(self, gen: int, seq: int):
+        """From-scratch build of visible version (gen, seq): the
+        generation's base corpus + its delta oplog replayed to ``seq``,
+        through the ONE production builder. Cached per distinct version."""
+        key = (gen, seq)
+        hit = self._oracle_cache.get(key)
+        if hit is not None:
+            return hit
+        g = self.history[gen]
+        ops = g.delta.oplog[:seq]
+        qidx, kept, sc = build_qac_index(
+            g.kept + [q for q, _ in ops],
+            list(g.scores) + [s for _, s in ops],
+            k_default=self.cfg.k, postings_codec=self._postings_codec)
+        view = MainCorpusView(qidx, kept, sc)
+        fwd = np.asarray(qidx.completions.fwd_terms)
+        self._oracle_cache[key] = (qidx, view, fwd)
+        return self._oracle_cache[key]
+
+    def oracle_answer(self, raw_query: str, gen: int, seq: int,
+                      k: int) -> tuple:
+        """The ground truth for one answer: parse ``raw_query`` against the
+        from-scratch index of version (gen, seq) and take its exact top-k
+        (smallest matching docids == (-score, lexicographic row) order),
+        decoded to strings. This is what every served ``FreshResult`` must
+        equal, bit for bit."""
+        qidx, view, fwd = self.oracle_index(gen, seq)
+        pids, plen, pok, suf, slen = parse_queries(qidx.dictionary,
+                                                   [raw_query])
+        lo, hi = (int(np.asarray(a)[0]) for a in
+                  qidx.dictionary.locate_prefix(suf, slen))
+        pl = int(plen[0])
+        if hi <= lo or (pl > 0 and bool((pids[0, :pl] == 0).any())):
+            return (None,) * k
+        keep = ((fwd >= lo) & (fwd < hi)).any(axis=1)
+        for t in set(int(x) for x in pids[0, :pl]):
+            keep &= (fwd == t).any(axis=1)
+        docids = np.nonzero(keep)[0][:k]
+        strings = tuple(view.string_of_docid[int(d)] for d in docids)
+        return strings + (None,) * (k - len(strings))
+
+    def check_parity(self, results, *, sample_every: int = 1) -> int:
+        """Assert the time-indexed parity gate over served results: every
+        (sampled) answer's strings equal the from-scratch oracle at its own
+        visible version. Returns the number of answers checked."""
+        checked = 0
+        for res in results[::max(sample_every, 1)]:
+            want = self.oracle_answer(res.query, res.gen, res.seq, res.k)
+            assert res.strings == want, (
+                f"freshness parity break at request {res.idx} "
+                f"({res.query!r}, gen={res.gen}, seq={res.seq}): "
+                f"served {res.strings[:3]}... vs oracle {want[:3]}...")
+            checked += 1
+        return checked
+
+    # -- reporting ------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Freshness counters + the runtime telemetry snapshot."""
+        served = list(self.answers.values())
+        apply_us = np.asarray([a["wall_us"] for a in self.apply_log]
+                              or [0.0])
+        stalls = np.asarray([s["swap_stall_us"] for s in self.swap_log]
+                            or [0.0])
+        return {
+            "generation": self.rt.generation,
+            "n_swaps": len(self.swap_log),
+            "n_mutations": len(self.apply_log),
+            "mutation_outcomes": dict(
+                Counter(a["outcome"] for a in self.apply_log)),
+            "delta_stats": self._cur().delta.stats(),
+            "delta_hit_answers": sum(1 for r in served if r.n_delta > 0),
+            "escalations": sum(r.escalations for r in served),
+            "apply_p50_us": float(np.percentile(apply_us, 50)),
+            "apply_p99_us": float(np.percentile(apply_us, 99)),
+            "swap_stall_p99_us": float(np.percentile(stalls, 99)),
+            "rebuild_wall_us": [s["rebuild_wall_us"] for s in self.swap_log],
+            "runtime": self.rt.telemetry.snapshot(),
+        }
+
+
+def _norm_event(ev):
+    """(t_us, kind, session, query, score) from a MutationEvent-like
+    object or a plain tuple."""
+    if hasattr(ev, "kind"):
+        return (float(ev.t_us), ev.kind, int(ev.session), ev.query,
+                float(ev.score))
+    t, kind, sess, q, sc = ev
+    return float(t), kind, int(sess), q, float(sc)
+
+
+def parse_and_prepare(qidx, trace, *, k: int = 10):
+    """``runtime.prepare_requests`` under its freshness-layer name: one
+    batched parse of (t_us, session, query) events against a SPECIFIC
+    generation's dictionary — requests are generation-local, so the
+    freshness layer re-parses per generation rather than once per trace."""
+    return prepare_requests(qidx, trace, k=k)

@@ -163,12 +163,16 @@ def prepare_requests(qidx: QACIndex, trace, *, k: int | np.ndarray = 10):
 @dataclasses.dataclass
 class _SessionEntry:
     """Last answered request of a session: its parse + (when complete) the
-    FULL ascending match set. ``full is None`` == truncated, no reuse."""
+    FULL ascending match set. ``full is None`` == truncated, no reuse.
+    ``gen`` is the index generation that produced the match set — docids
+    from another generation name different completions, so reuse requires
+    ``gen == runtime.generation`` (enforced in ``_reusable``)."""
 
     pid_set: frozenset
     lo: int
     hi: int
     full: np.ndarray | None
+    gen: int = 0
 
 
 class RuntimeTelemetry:
@@ -187,10 +191,28 @@ class RuntimeTelemetry:
         # began. The saturation bench (ISSUE 8) gates on this counter and
         # on queue_peak, so both are first-class snapshot() fields.
         self.deadline_violations = 0
+        # freshness (ISSUE 9): per-generation path counters + the swap
+        # invalidation ledger. paths_by_gen[g] counts hits/misses answered
+        # while generation g was installed; invalidations[(old, new)]
+        # records each swap's flush exactly once (count, entries dropped
+        # per tier) — tests assert count == 1 per transition.
+        self.paths_by_gen: dict[int, Counter] = {}
+        self.invalidations: dict[tuple[int, int], dict] = {}
 
-    def record(self, path: str, lat_us: float):
+    def record(self, path: str, lat_us: float, gen: int | None = None):
         self.paths[path] += 1
         self.lat_us.append(lat_us)
+        if gen is not None:
+            self.paths_by_gen.setdefault(gen, Counter())[path] += 1
+
+    def record_invalidation(self, old_gen: int, new_gen: int,
+                            n_lru: int, n_sessions: int):
+        key = (old_gen, new_gen)
+        entry = self.invalidations.setdefault(
+            key, {"count": 0, "lru_entries": 0, "session_entries": 0})
+        entry["count"] += 1
+        entry["lru_entries"] += n_lru
+        entry["session_entries"] += n_sessions
 
     def snapshot(self) -> dict:
         lat = np.asarray(self.lat_us if self.lat_us else [0.0])
@@ -218,6 +240,10 @@ class RuntimeTelemetry:
             "max_queue_depth": self.queue_peak,
             "deadline_violations": self.deadline_violations,
             "engine_wall_us": float(self.engine_wall_us),
+            "per_generation": {g: dict(c)
+                               for g, c in sorted(self.paths_by_gen.items())},
+            "invalidations": {f"{o}->{n}": dict(v) for (o, n), v in
+                              sorted(self.invalidations.items())},
         }
 
 
@@ -238,6 +264,11 @@ class QACOnlineRuntime:
         # dispatch, feeding the dispatcher's per-replica EWMA service-time
         # estimate. None = standalone runtime, no observer.
         self.on_dispatch = None
+        # freshness (ISSUE 9): the installed index generation. Cache keys
+        # and session entries carry this tag, and ``install_generation``
+        # is the ONLY way to advance it — reset() deliberately leaves it
+        # alone (it is index identity, not cache state).
+        self.generation = 0
         self.reset()
 
     def reset(self):
@@ -250,7 +281,39 @@ class QACOnlineRuntime:
         # the cluster measures re-routed requests from their ORIGINAL
         # arrival, which only it knows, so it reads completion times here
         self.done_t_us: dict[int, float] = {}
+        # freshness bookkeeping per answered request: which cache path
+        # served it and which generation was installed when it finished —
+        # the freshness layer keys its per-answer delta merge and the
+        # time-indexed oracle on these.
+        self.done_path: dict[int, str] = {}
+        self.done_gen: dict[int, int] = {}
         self.telemetry = RuntimeTelemetry()
+
+    def install_generation(self, generation: int, frontend: QACFrontend):
+        """Atomically swap in a rebuilt index: flush both cache tiers
+        EXACTLY ONCE (recorded in telemetry), rebind the frontend and its
+        host mirrors, and advance the generation id. Idempotent on the
+        same generation (a re-delivered swap must not double-flush);
+        refuses to move backwards; refuses to swap under queued requests
+        (the caller drains first — queued requests were admitted against
+        the old generation and must be answered by it)."""
+        if generation == self.generation:
+            return
+        if generation < self.generation:
+            raise ValueError(f"generation must be monotone: "
+                             f"{self.generation} -> {generation}")
+        if self.queue:
+            raise RuntimeError(
+                f"cannot swap generation with {len(self.queue)} queued "
+                f"requests; drain() first")
+        self.telemetry.record_invalidation(
+            self.generation, generation, len(self.cache), len(self.sessions))
+        self.cache.clear()
+        self.sessions.clear()
+        self.fe = frontend
+        self.fwd = np.asarray(frontend.qidx.completions.fwd_terms)
+        self._list_lens = frontend._list_lens
+        self.generation = generation
 
     # -- host mirrors of the engine's semantics -------------------------------
     @staticmethod
@@ -296,6 +359,8 @@ class QACOnlineRuntime:
         engine misses, so it must fall through to the engine instead."""
         if sess is None or sess.full is None:
             return False
+        if sess.gen != self.generation:
+            return False   # docids from another generation are meaningless
         if not self._scan_exact(r):
             return False
         new_pids = frozenset(int(t) for t in r.pids[: r.plen])
@@ -315,7 +380,10 @@ class QACOnlineRuntime:
         the row iff the row is INF-padded (fewer than k matches == the row
         IS the whole set)."""
         if self.cfg.cache_entries > 0:
-            ck = (r.key, r.k)
+            # the generation tag in the key makes stale hits structurally
+            # impossible even if a flush were missed; the swap still
+            # flushes so dead-generation entries don't occupy LRU slots
+            ck = (self.generation, r.key, r.k)
             # private copy: returned rows are caller-owned, so an in-place
             # consumer edit must never reach the cached entry
             self.cache[ck] = row.copy()
@@ -328,7 +396,7 @@ class QACOnlineRuntime:
                 full = row[row != INF_DOCID]
             self.sessions[r.session] = _SessionEntry(
                 pid_set=frozenset(int(t) for t in r.pids[: r.plen]),
-                lo=r.lo, hi=r.hi, full=full)
+                lo=r.lo, hi=r.hi, full=full, gen=self.generation)
             self.sessions.move_to_end(r.session)
             while len(self.sessions) > self.cfg.session_entries:
                 self.sessions.popitem(last=False)
@@ -337,7 +405,9 @@ class QACOnlineRuntime:
                 lat_us: float):
         self._results[r.idx] = row
         self.done_t_us[r.idx] = r.t_us + lat_us
-        self.telemetry.record(path, lat_us)
+        self.done_path[r.idx] = path
+        self.done_gen[r.idx] = self.generation
+        self.telemetry.record(path, lat_us, gen=self.generation)
 
     # -- scheduler ------------------------------------------------------------
     def submit(self, r: QACRequest):
@@ -352,7 +422,7 @@ class QACOnlineRuntime:
             self._finish(r, row, "trivial", (time.perf_counter() - t0) * 1e6)
             return
         if self.cfg.cache_entries > 0:
-            ck = (r.key, r.k)
+            ck = (self.generation, r.key, r.k)
             hit = self.cache.get(ck)
             if hit is not None:
                 self.cache.move_to_end(ck)

@@ -3,5 +3,8 @@ from .synth import (  # noqa: F401
     generate_query_log,
     KeystrokeTraceConfig,
     generate_keystroke_trace,
+    MutationEvent,
+    MutationTraceConfig,
+    generate_mutation_trace,
     make_eval_queries,
 )

@@ -1,0 +1,317 @@
+"""Freshness tier (ISSUE 9): time-indexed parity across live mutations and
+generation swaps.
+
+THE acceptance gate: replay a mutation trace through ``GenerationalQAC``
+(delta tier + k-way merge + >= 1 mid-trace rebuild-and-swap) and every
+answer must be bit-identical to a from-scratch ``build_qac_index`` of its
+own visible version ``(generation, seq)`` — the freshness extension of the
+repo's parity-oracle discipline. Plus: the delta tier's insert algebra and
+postings narrowing, exactly-once cache invalidation per swap, the
+generation-tagged runtime contract, cluster-wide swap propagation, and
+config validation end to end (``FreshnessConfig`` and
+``QACArch.freshness_config``).
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core import build_qac_index
+from repro.core.delta import DeltaIndex, MainCorpusView
+from repro.serve import QACFrontend
+from repro.serve.cluster import (ClusterConfig, QACServingCluster,
+                                 check_cluster_parity_timed)
+from repro.serve.freshness import (FreshnessConfig, GenerationalQAC,
+                                   parse_and_prepare)
+from repro.serve.runtime import QACOnlineRuntime, RuntimeConfig
+from repro.text import (KeystrokeTraceConfig, MutationTraceConfig,
+                        SynthLogConfig, generate_mutation_trace,
+                        generate_query_log)
+
+_RT = dict(max_batch=8, slack_us=2_000.0)
+
+
+# ------------------------------------------------------------ delta tier
+@pytest.fixture(scope="module")
+def tiny():
+    qs = ["alpha beta", "alpha gamma", "beta gamma", "delta", "alpha",
+          "gamma delta", "beta", "epsilon", "alpha delta"]
+    sc = [9.0, 8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0]
+    qidx, kept, scores = build_qac_index(qs, sc)
+    return MainCorpusView(qidx, kept, scores)
+
+
+def test_delta_insert_outcome_algebra(tiny):
+    d = DeltaIndex(tiny, capacity=16)
+    assert d.insert("alpha epsilon", 4.0) == "applied"       # new completion
+    assert d.insert("alpha epsilon", 2.0) == "noop"          # delta outranks
+    assert d.insert("alpha epsilon", 6.0) == "updated"       # in-place raise
+    assert d.entries[0].score == 6.0
+    assert d.insert("alpha beta", 1.0) == "noop"             # main outranks
+    assert d.insert("alpha beta", 99.0) == "applied"         # shadows main
+    shadow = tiny.docid_of_string["alpha beta"]
+    assert d.shadowed() == {shadow}
+    assert d.insert("zzunknownq", 5.0) == "deferred"         # OOV term
+    assert d.insert("", 5.0) == "dropped"
+    assert d.insert(" ".join(["alpha"] * 9), 5.0) == "dropped"
+    # seq counts VISIBLE changes only: 2 applied + 1 updated
+    assert d.seq == 3 and d.n == 2
+    assert d.oplog == [("alpha epsilon", 4.0), ("alpha epsilon", 6.0),
+                       ("alpha beta", 99.0)]
+    s = d.stats()
+    assert (s["applied"], s["updated"], s["noop"],
+            s["deferred"], s["dropped"]) == (2, 1, 2, 1, 2)
+    dq, ds = d.fold_corpus()
+    assert ("zzunknownq", 5.0) in zip(dq, ds)
+    assert ("alpha beta", 99.0) in zip(dq, ds)
+
+
+def test_delta_capacity_overflow(tiny):
+    d = DeltaIndex(tiny, capacity=1)
+    assert d.insert("alpha epsilon", 4.0) == "applied"
+    with pytest.raises(OverflowError):
+        d.insert("beta epsilon", 4.0)
+    # noop/updated/deferred never consume capacity
+    assert d.insert("alpha epsilon", 9.0) == "updated"
+    assert d.insert("zzq", 1.0) == "deferred"
+
+
+def test_delta_history_replays_exact_scores(tiny):
+    d = DeltaIndex(tiny, capacity=8)
+    d.insert("alpha epsilon", 4.0)      # seq 1
+    d.insert("beta epsilon", 5.0)       # seq 2
+    d.insert("alpha epsilon", 7.0)      # seq 3: raise
+    e = d.entries[0]
+    assert e.score_at(1) == 4.0 and e.score_at(2) == 4.0
+    assert e.score_at(3) == 7.0 and e.score == 7.0
+    assert d._n_visible(0) == 0 and d._n_visible(1) == 1
+    assert d._n_visible(2) == 2 == d._n_visible(2)
+    with pytest.raises(ValueError):
+        e.score_at(0)                   # before the entry was born
+
+
+def _brute_matches(d, pids, plen, lo, hi, seq):
+    out = []
+    for i, e in enumerate(d.entries):
+        if e.born > seq:
+            continue
+        row = set(int(t) for t in e.row if t)
+        if not any(lo <= t < hi for t in row):
+            continue
+        if any(int(t) not in row for t in pids[:plen]):
+            continue
+        out.append(i)
+    return sorted(out, key=lambda i: (-d.entries[i].score_at(seq),
+                                      d.entries[i].tokens))
+
+
+def test_delta_matches_equals_brute_force_and_postings_narrowing(tiny):
+    rng = np.random.default_rng(5)
+    d = DeltaIndex(tiny, capacity=64)
+    vocab = ["alpha", "beta", "gamma", "delta", "epsilon"]
+    for _ in range(40):
+        toks = sorted(set(rng.choice(vocab, size=int(rng.integers(1, 4)))))
+        d.insert(" ".join(toks), float(rng.integers(1, 50)))
+    V = tiny.qidx.dictionary.n_terms
+    ids = {t: tiny.qidx.dictionary.id_of(t) for t in vocab}
+    checked = 0
+    for _ in range(200):
+        plen = int(rng.integers(0, 3))
+        pids = np.zeros(8, dtype=np.int64)
+        pids[:plen] = [ids[vocab[int(i)]]
+                       for i in rng.integers(0, len(vocab), plen)]
+        lo = int(rng.integers(1, V + 2))
+        hi = int(rng.integers(0, V + 2))
+        seq = int(rng.integers(0, d.seq + 1))
+        got = d.matches(pids, plen, lo, hi, upto=seq)
+        assert got == _brute_matches(d, pids, plen, lo, hi, seq)
+        checked += bool(got)
+    assert checked > 20, "trial distribution degenerated to empty matches"
+    # the engines' reject rule: unknown prefix term -> no matches
+    assert d.matches(np.asarray([0, 0]), 1, 1, V + 1) == []
+
+
+# ------------------------------------------------------------ config plumbing
+def test_freshness_config_validation():
+    FreshnessConfig(k=5, delta_capacity=8, swap_threshold=8)
+    with pytest.raises(ValueError):
+        FreshnessConfig(k=0)
+    with pytest.raises(ValueError):
+        FreshnessConfig(k=10, delta_capacity=4)       # capacity < k
+    with pytest.raises(ValueError):
+        FreshnessConfig(delta_capacity=64, swap_threshold=65)
+    with pytest.raises(ValueError):
+        FreshnessConfig(swap_threshold=0)
+
+
+def test_arch_freshness_config():
+    from repro.configs.qac_common import QACArch
+
+    fc = QACArch(freshness_delta_capacity=256,
+                 freshness_swap_threshold=128).freshness_config()
+    assert isinstance(fc, FreshnessConfig)
+    assert (fc.k, fc.delta_capacity, fc.swap_threshold) == (10, 256, 128)
+    with pytest.raises(ValueError):
+        QACArch(freshness_swap_threshold=0).freshness_config()
+
+
+# ------------------------------------------------------------ generational QAC
+@pytest.fixture(scope="module")
+def corpus():
+    qs, sc = generate_query_log(SynthLogConfig(n_queries=300, vocab_size=80,
+                                               mean_term_chars=4.0, seed=17))
+    return qs, sc
+
+
+def _trace(corpus, seed, n_mut=10, sessions=8):
+    qs, sc = corpus
+    return generate_mutation_trace(qs, sc, MutationTraceConfig(
+        keystrokes=KeystrokeTraceConfig(
+            n_sessions=sessions, queries_per_session=1,
+            mean_keystroke_ms=2.0, seed=seed),
+        n_mutations=n_mut, follower_sessions=6, seed=seed))
+
+
+def _run(corpus, seed, swap_threshold=3, n_mut=10):
+    qs, sc = corpus
+    gq = GenerationalQAC(qs, sc, rt_cfg=RuntimeConfig(**_RT),
+                         cfg=FreshnessConfig(
+                             k=10, delta_capacity=256,
+                             swap_threshold=swap_threshold))
+    results = gq.run_mutation_trace(_trace(corpus, seed, n_mut=n_mut))
+    return gq, results
+
+
+def _assert_freshness_gates(gq, results, *, sample_every=1):
+    s = gq.snapshot()
+    assert s["n_swaps"] >= 1, "trace must cross at least one swap"
+    assert s["delta_hit_answers"] > 0, "no answer was served from the delta"
+    inv = s["runtime"]["invalidations"]
+    assert len(inv) == s["n_swaps"]
+    for key, v in inv.items():
+        assert v["count"] == 1, f"swap {key} invalidated {v['count']} times"
+    # per-generation traffic on both sides of the swap
+    per_gen = s["runtime"]["per_generation"]
+    assert 0 in per_gen and s["generation"] in per_gen
+    assert gq.check_parity(results, sample_every=sample_every) > 0
+
+
+def test_mutation_trace_parity_across_swap(corpus):
+    """THE gate: every answer == from-scratch build of its own visible
+    (generation, seq) version, across >= 1 mid-trace swap."""
+    gq, results = _run(corpus, seed=1)
+    assert all(r.gen >= 1 for r in results[-5:]), \
+        "late answers must come from a post-swap generation"
+    _assert_freshness_gates(gq, results, sample_every=1)
+
+
+@given(seed=st.integers(0, 15))
+@settings(max_examples=5, deadline=None)
+def test_mutation_trace_parity_property(corpus, seed):
+    gq, results = _run(corpus, seed=seed, n_mut=6, swap_threshold=2)
+    _assert_freshness_gates(gq, results, sample_every=3)
+
+
+@pytest.mark.parametrize("seed", [2, 5])
+def test_mutation_trace_parity_fixed_seeds(corpus, seed):
+    # always-on versions of the property test (hypothesis may be absent)
+    gq, results = _run(corpus, seed=seed, n_mut=6, swap_threshold=2)
+    _assert_freshness_gates(gq, results, sample_every=3)
+
+
+def test_no_swap_trace_stays_generation_zero(corpus):
+    qs, sc = corpus
+    gq = GenerationalQAC(qs, sc, rt_cfg=RuntimeConfig(**_RT),
+                         cfg=FreshnessConfig(k=10, delta_capacity=256,
+                                             swap_threshold=256))
+    results = gq.run_mutation_trace(_trace(corpus, seed=3, n_mut=5))
+    s = gq.snapshot()
+    assert s["n_swaps"] == 0 and s["generation"] == 0
+    assert s["runtime"]["invalidations"] == {}
+    assert all(r.gen == 0 for r in results)
+    assert gq.check_parity(results, sample_every=2) > 0
+
+
+def test_replay_resets_and_reproduces(corpus):
+    qs, sc = corpus
+    gq = GenerationalQAC(qs, sc, rt_cfg=RuntimeConfig(**_RT),
+                         cfg=FreshnessConfig(k=10, delta_capacity=256,
+                                             swap_threshold=3))
+    events = _trace(corpus, seed=4, n_mut=6)
+    a = gq.replay(events)                 # warm pass + reset + measured
+    gq.reset()                            # else b would re-mutate a's state
+    b = gq.replay(events, warm=False)     # must be bit-identical
+    assert [r.strings for r in a] == [r.strings for r in b]
+    assert [(r.gen, r.seq) for r in a] == [(r.gen, r.seq) for r in b]
+
+
+# ------------------------------------------------------ runtime generation tag
+def test_install_generation_contract(corpus):
+    qs, sc = corpus
+    qidx, kept, _ = build_qac_index(qs, sc)
+    fe = QACFrontend(qidx, k=10, specialize_list_pad=False)
+    rt = QACOnlineRuntime(fe, RuntimeConfig(**_RT))
+    assert rt.generation == 0
+    rt.install_generation(0, fe)                      # same gen: no-op
+    assert rt.telemetry.snapshot()["invalidations"] == {}
+    rt.install_generation(2, fe)
+    assert rt.generation == 2
+    with pytest.raises(ValueError):
+        rt.install_generation(1, fe)                  # never backwards
+    [r] = parse_and_prepare(qidx, [(0.0, 0, kept[0][:2])], k=10)
+    rt.submit(r)
+    if rt.queue:                                      # undispatched request
+        with pytest.raises(RuntimeError):
+            rt.install_generation(3, fe)
+    rt.drain()
+    rt.install_generation(3, fe)
+    inv = rt.telemetry.snapshot()["invalidations"]
+    assert set(inv) == {"0->2", "2->3"}
+    assert all(v["count"] == 1 for v in inv.values())
+
+
+# ------------------------------------------------------------ cluster swaps
+def test_cluster_propagate_swap_and_timed_parity(corpus):
+    qs, sc = corpus
+    qidx0, kept0, sc0 = build_qac_index(qs, sc)
+    fe0 = QACFrontend(qidx0, k=10, specialize_list_pad=False)
+    extra = ["newly trending completion", "another fresh one"]
+    qidx1, _, _ = build_qac_index(list(qs) + extra,
+                                  list(sc) + [99.0, 98.0])
+    fe1 = QACFrontend(qidx1, k=10, specialize_list_pad=False)
+
+    from repro.text import generate_keystroke_trace
+    trace = generate_keystroke_trace(kept0, KeystrokeTraceConfig(
+        n_sessions=8, mean_keystroke_ms=2.0, seed=23))
+    cut = len(trace) // 2
+    t_mid = (trace[cut - 1][0] + trace[cut][0]) / 2
+    reqs0 = parse_and_prepare(qidx0, trace[:cut], k=10)
+    reqs1 = parse_and_prepare(qidx1, trace[cut:], k=10)
+    for i, r in enumerate(reqs1):
+        r.idx = len(reqs0) + i            # keep result keys globally unique
+
+    relaxed = dict(degrade_pressure_us=1e12, shed_bulk_pressure_us=1e12,
+                   shed_pressure_us=1e12)
+    cl = QACServingCluster(qidx0, ClusterConfig(n_replicas=2, **relaxed),
+                           RuntimeConfig(**_RT), frontends=[fe0, fe0])
+    with pytest.raises(ValueError):
+        cl.propagate_swap(1, [fe1])       # one frontend for two replicas
+    for r in reqs0:
+        cl.submit(r)
+    cl.propagate_swap(1, [fe1, fe1], t_us=t_mid)
+    for r in reqs1:
+        cl.submit(r)
+    cl.drain()
+    results = [cl._results[r.idx] for r in reqs0 + reqs1]
+    assert all(r.status == "ok" for r in results)
+    # admitted-before-swap answered by gen 0, after by gen 1
+    assert {r.gen for r in results[:cut]} == {0}
+    assert {r.gen for r in results[cut:]} == {1}
+    n = check_cluster_parity_timed({0: fe0, 1: fe1}, reqs0 + reqs1, results)
+    assert n == len(results)
+    # the timed oracle hard-fails on a generation it has no frontend for
+    with pytest.raises(AssertionError):
+        check_cluster_parity_timed({0: fe0}, reqs0 + reqs1, results)
+    assert cl.telemetry.snapshot()["swaps"] == [(t_mid, 1)]
+    for rep in cl.replicas:
+        inv = rep.runtime.telemetry.snapshot()["invalidations"]
+        assert list(inv) == ["0->1"] and inv["0->1"]["count"] == 1

@@ -1,0 +1,181 @@
+"""Mutation-trace invariants (ISSUE 9 satellite): the synthetic live-update
+workload must be a well-formed merge of keystroke traffic and corpus
+mutations — non-decreasing timestamps, session partials that are prefixes of
+the session's final query, an exact mutation count, strictly-raising trend
+scores, and followers that only type a mutated query after its mutation
+lands. The freshness layer's parity suite (test_freshness.py) leans on every
+one of these.
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.text import (KeystrokeTraceConfig, MutationEvent,
+                        MutationTraceConfig, SynthLogConfig,
+                        generate_keystroke_trace, generate_mutation_trace,
+                        generate_query_log)
+
+
+def _pool(seed=3, n=120):
+    qs, sc = generate_query_log(SynthLogConfig(
+        n_queries=n, vocab_size=40, mean_term_chars=4.0, seed=seed))
+    return qs, sc
+
+
+def _cfg(seed=0, n_sessions=6, n_mutations=None, mutation_rate=0.02,
+         followers=4, p_oov=0.1):
+    return MutationTraceConfig(
+        keystrokes=KeystrokeTraceConfig(
+            n_sessions=n_sessions, queries_per_session=1,
+            mean_keystroke_ms=2.0, seed=seed),
+        n_mutations=n_mutations, mutation_rate=mutation_rate,
+        follower_sessions=followers, p_oov_term=p_oov, seed=seed)
+
+
+def test_timestamps_sorted_and_kinds_partitioned():
+    qs, sc = _pool()
+    events = generate_mutation_trace(qs, sc, _cfg(n_mutations=9))
+    ts = [e.t_us for e in events]
+    assert ts == sorted(ts)
+    kinds = {e.kind for e in events}
+    assert kinds <= {"request", "insert", "trend"}
+    for e in events:
+        assert isinstance(e, MutationEvent)
+        if e.kind == "request":
+            assert e.session >= 0
+        else:
+            assert e.session == -1 and e.score > 0
+
+
+@given(seed=st.integers(0, 31), n_mut=st.integers(0, 12))
+@settings(max_examples=20, deadline=None)
+def test_exact_mutation_count_override(seed, n_mut):
+    qs, sc = _pool(seed=seed % 4)
+    events = generate_mutation_trace(
+        qs, sc, _cfg(seed=seed, n_mutations=n_mut))
+    assert sum(e.kind != "request" for e in events) == n_mut
+
+
+@given(seed=st.integers(0, 31),
+       rate=st.floats(0.0, 0.2, allow_nan=False))
+@settings(max_examples=20, deadline=None)
+def test_rate_derived_mutation_count(seed, rate):
+    qs, sc = _pool(seed=seed % 4)
+    cfg = _cfg(seed=seed, mutation_rate=rate)
+    n_base = len(generate_keystroke_trace(qs, cfg.keystrokes))
+    events = generate_mutation_trace(qs, sc, cfg)
+    assert (sum(e.kind != "request" for e in events)
+            == max(1, round(rate * n_base)))
+
+
+def _check_prefixes(seed):
+    # queries_per_session=1: every request a session emits is a prefix of
+    # that session's final (longest) string — backspaces only retype
+    # shorter prefixes of the same target, and followers type exactly one
+    # mutated query
+    qs, sc = _pool(seed=seed % 4)
+    events = generate_mutation_trace(qs, sc, _cfg(seed=seed, n_mutations=6))
+    by_session = {}
+    for e in events:
+        if e.kind == "request":
+            by_session.setdefault(e.session, []).append(e.query)
+    assert by_session, "trace emitted no requests"
+    for s, partials in by_session.items():
+        final = max(partials, key=len)
+        for p in partials:
+            assert final.startswith(p), \
+                f"session {s}: {p!r} not a prefix of {final!r}"
+
+
+@given(seed=st.integers(0, 63))
+@settings(max_examples=25, deadline=None)
+def test_session_partials_prefix_their_final_query(seed):
+    _check_prefixes(seed)
+
+
+def _check_trend(seed):
+    qs, sc = _pool(seed=seed % 4)
+    events = generate_mutation_trace(qs, sc, _cfg(seed=seed, n_mutations=10))
+    best = {}
+    for q, s in zip(qs, sc):
+        best[q] = max(best.get(q, -np.inf), float(s))
+    for e in events:
+        if e.kind == "trend":
+            assert e.query in best, "trend target must come from the pool"
+            assert e.score > best[e.query], \
+                f"trend on {e.query!r}: {e.score} <= running best {best[e.query]}"
+            best[e.query] = e.score
+        elif e.kind == "insert":
+            assert e.query not in best, "insert must be a NEW completion"
+            best[e.query] = e.score
+
+
+@given(seed=st.integers(0, 63))
+@settings(max_examples=25, deadline=None)
+def test_trend_strictly_raises_running_best(seed):
+    _check_trend(seed)
+
+
+def _check_followers(seed):
+    qs, sc = _pool(seed=seed % 4)
+    cfg = _cfg(seed=seed, n_mutations=8, followers=6)
+    events = generate_mutation_trace(qs, sc, cfg)
+    mut_t = {}   # query -> earliest mutation time
+    for e in events:
+        if e.kind != "request":
+            mut_t.setdefault(e.query, e.t_us)
+    base_sessions = cfg.keystrokes.n_sessions
+    followers = {}
+    for e in events:
+        if e.kind == "request" and e.session >= base_sessions:
+            followers.setdefault(e.session, []).append(e)
+    assert followers, "follower sessions must emit traffic"
+    for s, evs in followers.items():
+        final = max((e.query for e in evs), key=len)
+        assert final in mut_t, \
+            f"follower session {s} types {final!r}, which was never mutated"
+        assert min(e.t_us for e in evs) > mut_t[final]
+
+
+@given(seed=st.integers(0, 63))
+@settings(max_examples=25, deadline=None)
+def test_followers_start_after_their_mutation(seed):
+    _check_followers(seed)
+
+
+@pytest.mark.parametrize("seed", [0, 7, 23])
+def test_invariants_fixed_seeds(seed):
+    # always-on versions of the property tests (the @given runs skip when
+    # hypothesis is absent)
+    _check_prefixes(seed)
+    _check_trend(seed)
+    _check_followers(seed)
+
+
+def test_deterministic_and_oov_inserts():
+    qs, sc = _pool()
+    cfg = _cfg(seed=9, n_mutations=20, p_oov=1.0)
+    a = generate_mutation_trace(qs, sc, cfg)
+    b = generate_mutation_trace(qs, sc, cfg)
+    assert a == b
+    vocab = {t for q in qs for t in q.split()}
+    inserts = [e for e in a if e.kind == "insert"]
+    assert inserts, "p_oov=1 trace should still produce inserts"
+    for e in inserts:
+        assert e.query.split()[-1] not in vocab, \
+            "p_oov_term=1.0: every insert's last term must be out-of-vocab"
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        MutationTraceConfig(trend_boost=1.0)
+    with pytest.raises(ValueError):
+        MutationTraceConfig(mutation_rate=-0.1)
+    with pytest.raises(ValueError):
+        MutationTraceConfig(tail_fraction=1.5)
+    with pytest.raises(ValueError):
+        MutationTraceConfig(n_mutations=-1)
+    with pytest.raises(ValueError):
+        MutationTraceConfig(follower_sessions=-2)
+    with pytest.raises(ValueError):
+        generate_mutation_trace(["a"], [1.0, 2.0])
