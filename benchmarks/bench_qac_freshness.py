@@ -40,6 +40,7 @@ if "--quick" in sys.argv:               # before .common reads BENCH_QUICK
 import numpy as np
 
 from .common import bench_corpus, emit, timer, QUICK, write_bench_json
+from repro.obs.metrics import percentiles
 from repro.serve.freshness import FreshnessConfig, GenerationalQAC
 from repro.serve.runtime import RuntimeConfig
 from repro.text import (KeystrokeTraceConfig, MutationTraceConfig,
@@ -79,10 +80,10 @@ def main():
                     rng.integers(0, len(vocab), size=int(rng.integers(1, 4)))]
             gq.insert(" ".join(toks), float(np.median(scores)) + 1.0,
                       t_us=float(i))
-    apply_us = np.asarray([a["wall_us"] for a in gq.apply_log])
+    ap = percentiles([a["wall_us"] for a in gq.apply_log], (50, 99))
     outcomes = gq.snapshot()["mutation_outcomes"]
-    emit("qac_freshness_apply_p99_us", float(np.percentile(apply_us, 99)),
-         f"p50={np.percentile(apply_us, 50):.0f},n={n_apply},"
+    emit("qac_freshness_apply_p99_us", ap["p99_us"],
+         f"p50={ap['p50_us']:.0f},n={n_apply},"
          f"outcomes={'/'.join(f'{k}:{v}' for k, v in sorted(outcomes.items()))}")
 
     # -- merged vs immutable single-term path at B=256 -----------------------
@@ -146,9 +147,9 @@ def main():
     stalls = [sw["swap_stall_us"] for sw in gq2.swap_log]
     rebuilds = [sw["rebuild_wall_us"] for sw in gq2.swap_log]
     emit("qac_freshness_swap_stall_p99_us",
-         float(np.percentile(stalls, 99)),
+         percentiles(stalls, (99,))["p99_us"],
          f"swaps={s['n_swaps']},rebuild_p50_ms="
-         f"{np.percentile(rebuilds, 50)/1e3:.0f},parity_n={n_par}")
+         f"{percentiles(rebuilds, (50,))['p50_us']/1e3:.0f},parity_n={n_par}")
 
     def hit_rate(paths: dict) -> float:
         n = sum(paths.values())

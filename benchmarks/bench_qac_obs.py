@@ -1,0 +1,135 @@
+"""Observability bench (ISSUE 10): tracing overhead + jit-audit gates.
+
+Three acceptance gates over the obs stack (src/repro/obs/), enforced here
+and emitted into BENCH_qac.json:
+
+  * ``qac_obs_overhead_ratio`` — online p99 with request tracing at the
+    production 1/16 sampling stride vs tracing disabled, same trace, same
+    warm frontend, best-of-3 interleaved trials. Gate: <= 1.10. Tracing
+    must be observability, not a tax — every instrumentation site is
+    behind ``tracer is not None`` + ``want(idx)``, and span construction
+    happens OUTSIDE the measured engine-wall windows.
+  * bit-parity: the rows served with tracing on are bit-identical to the
+    rows served with tracing off (sampling can never change answers).
+  * the jit-variant auditor's negative control: a frontend with
+    ``specialize_list_pad=True`` (the open-variant config the online stack
+    forbids), warmed ONLY on single-term traffic and then frozen, must
+    produce >= 1 flagged mid-trace compile when the full trace's
+    multi-term requests arrive — a REAL compile caught in the act, and
+    ``assert_closed()`` must raise on it. The same trace through the
+    closed ``specialize_list_pad=False`` frontend records zero.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if "--quick" in sys.argv:               # before .common reads BENCH_QUICK
+    os.environ["BENCH_QUICK"] = "1"
+
+import numpy as np
+
+from .common import bench_corpus, emit, QUICK, write_bench_json
+from repro.obs import JitAuditError, JitAuditor, Tracer
+from repro.serve.frontend import QACFrontend
+from repro.serve.runtime import (QACOnlineRuntime, RuntimeConfig,
+                                 prepare_requests)
+from repro.text import KeystrokeTraceConfig, generate_keystroke_trace
+
+OVERHEAD_CAP = 1.10          # traced p99 vs untraced p99, 1/16 sampling
+SAMPLE_EVERY = 16            # the production stride (QACArch default)
+TRIALS = 3                   # best-of-N interleaved, min-vs-min
+
+
+def main():
+    qidx, kept, host, rows, d_of_row = bench_corpus()
+    n_sessions = 48 if QUICK else 96
+    trace = generate_keystroke_trace(kept, KeystrokeTraceConfig(
+        n_sessions=n_sessions, seed=33))
+    reqs = prepare_requests(qidx, trace, k=10)
+    cfg = RuntimeConfig(max_batch=64, slack_us=2_000.0)
+
+    # -- overhead: traced vs untraced, shared warm frontend ------------------
+    fe = QACFrontend(qidx, k=10, specialize_list_pad=False)
+    tracer = Tracer(sample_every=SAMPLE_EVERY)
+    rt_off = QACOnlineRuntime(fe, cfg)
+    rt_on = QACOnlineRuntime(fe, cfg, tracer=tracer)
+    # one warm pass compiles every jit variant the trace can form; the
+    # frontend is shared, so both runtimes serve from the same warm cache
+    rt_off.warmup(reqs)
+    rt_off.run_trace(reqs)
+    p99_off, p99_on = [], []
+    rows_off = rows_on = None
+    for _ in range(TRIALS):
+        rt_off.reset()
+        rows_off = rt_off.run_trace(reqs)
+        p99_off.append(rt_off.telemetry.snapshot()["p99_us"])
+        rt_on.reset()
+        tracer.clear()
+        rows_on = rt_on.run_trace(reqs)
+        p99_on.append(rt_on.telemetry.snapshot()["p99_us"])
+    ratio = min(p99_on) / max(min(p99_off), 1e-9)
+    emit("qac_obs_p99_off_us", min(p99_off),
+         f"n={len(reqs)},sessions={n_sessions}")
+    emit("qac_obs_p99_on_us", min(p99_on),
+         f"spans={len(tracer.spans)},sample_every={SAMPLE_EVERY}")
+    emit("qac_obs_overhead_ratio", ratio,
+         f"cap={OVERHEAD_CAP},trials={TRIALS}")
+    assert tracer.spans, "traced replay recorded no spans"
+    assert ratio <= OVERHEAD_CAP, \
+        (f"tracing overhead {ratio:.3f}x exceeds {OVERHEAD_CAP}x cap "
+         f"(p99 on={min(p99_on):.0f}us off={min(p99_off):.0f}us)")
+
+    # -- bit-parity: sampling can never change answers -----------------------
+    for i, (a, b) in enumerate(zip(rows_on, rows_off)):
+        assert np.array_equal(a, b), \
+            f"tracing changed answer at request {i} ({reqs[i].query!r})"
+
+    # -- jit audit: closed config records zero post-freeze compiles ----------
+    aud_closed = JitAuditor()
+    fe_closed = QACFrontend(qidx, k=10, specialize_list_pad=False,
+                            auditor=aud_closed)
+    rt_c = QACOnlineRuntime(fe_closed, cfg)
+    rt_c.warmup(reqs)
+    rt_c.run_trace(reqs)
+    aud_closed.freeze()
+    rt_c.reset()
+    rt_c.run_trace(reqs)
+    aud_closed.assert_closed()
+    assert aud_closed.compiles, "closed run compiled nothing at warmup"
+
+    # -- negative control: the open-variant config MUST get flagged ----------
+    # warm only on single-term traffic, freeze, then serve the full trace:
+    # the multi-term class's per-bucket list_pad specialization mints its
+    # variants mid-trace — a real compile on the serving path, caught live
+    aud_open = JitAuditor()
+    fe_open = QACFrontend(qidx, k=10, specialize_list_pad=True,
+                          auditor=aud_open)
+    rt_o = QACOnlineRuntime(fe_open, cfg)
+    singles = [r for r in reqs if r.plen == 0]
+    assert singles and len(singles) < len(reqs), \
+        "negative control needs a mixed single/multi trace"
+    rt_o.warmup(singles)
+    rt_o.run_trace(singles)
+    aud_open.freeze()
+    rt_o.reset()
+    rt_o.run_trace(reqs)
+    viol = aud_open.violations
+    assert len(viol) >= 1, \
+        "open-variant frontend compiled nothing mid-trace — negative " \
+        "control is not exercising the auditor"
+    try:
+        aud_open.assert_closed()
+    except JitAuditError:
+        pass
+    else:
+        raise AssertionError("assert_closed() accepted post-freeze compiles")
+    emit("qac_obs_jit_violations_flagged", float(len(viol)),
+         f"first_key={viol[0]['key']},closed_variants="
+         f"{len(aud_closed.compiles)}")
+
+    write_bench_json()
+
+
+if __name__ == "__main__":
+    main()

@@ -61,6 +61,68 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.3f},{derived}")
 
 
+# regression-gate direction heuristics (ISSUE 10): which way is better for
+# a BENCH_qac.json metric, decided from name tokens. Lower-better covers
+# latencies, sizes and failure rates; higher-better covers throughput,
+# hit/recovery rates and accuracy-style scores.
+_LOWER_BETTER = ("_us", "_bpi", "ratio", "shed_rate", "stall", "_bytes",
+                 "_ms")
+_HIGHER_BETTER = ("qps", "hit_rate", "recovery", "mips", "agreement",
+                  "coverage", "recall", "mrr")
+
+
+def metric_direction(name: str) -> str:
+    """"lower" | "higher" | "unknown" — which direction improves ``name``.
+
+    Token match on the metric name (suffix conventions are stable across
+    the bench modules); "unknown" metrics are reported but never gate.
+    Higher-better tokens win ties: a name like ``decode_us_per_mips``
+    reads as a throughput metric.
+    """
+    low = name.lower()
+    if any(t in low for t in _HIGHER_BETTER):
+        return "higher"
+    if any(t in low for t in _LOWER_BETTER):
+        return "lower"
+    return "unknown"
+
+
+def compare_results(current: dict, baseline: dict, *,
+                    tolerance: float = 0.5) -> dict:
+    """Diff a fresh bench run against the committed baseline.
+
+    A metric REGRESSES when it moves in its bad direction by more than
+    ``tolerance`` (relative: 0.5 = 50%, generous because these benches run
+    on shared noisy hosts; the gate is for order-of-magnitude breakage
+    like a kernel silently falling back to XLA, not for jitter). Returns
+    ``{"rows": [...], "regressions": [names], "missing": [names]}`` where
+    rows carry (name, base, cur, ratio, direction, status) and ``missing``
+    lists baseline metrics the fresh run did not produce (only metrics
+    present in BOTH are compared — a partial ``--only`` run gates only
+    what it ran).
+    """
+    if tolerance < 0:
+        raise ValueError(f"tolerance must be >= 0, got {tolerance}")
+    rows, regressions = [], []
+    for name in sorted(set(baseline) & set(current)):
+        base, cur = float(baseline[name]), float(current[name])
+        direction = metric_direction(name)
+        ratio = cur / base if base else float("inf") if cur else 1.0
+        if direction == "lower":
+            bad = cur > base * (1.0 + tolerance)
+        elif direction == "higher":
+            bad = cur < base * (1.0 - tolerance)
+        else:
+            bad = False
+        status = "REGRESSED" if bad else "ok"
+        if bad:
+            regressions.append(name)
+        rows.append(dict(name=name, base=base, cur=cur, ratio=ratio,
+                         direction=direction, status=status))
+    missing = sorted(set(baseline) - set(current))
+    return {"rows": rows, "regressions": regressions, "missing": missing}
+
+
 def write_bench_json(path: str | None = None) -> str:
     """Merge all emitted results as {name: value} JSON at the repo root.
 

@@ -31,17 +31,66 @@ MODULES = [
     "bench_qac_serve",
     "bench_qac_cluster",
     "bench_qac_freshness",
+    "bench_qac_obs",
     "bench_roofline",
 ]
+
+
+def _load_baseline() -> dict:
+    import json
+
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_qac.json")
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def _print_compare(report: dict, tolerance: float) -> None:
+    print(f"# === compare vs committed BENCH_qac.json "
+          f"(tolerance {tolerance:.0%}) ===", flush=True)
+    for row in report["rows"]:
+        arrow = {"lower": "v", "higher": "^", "unknown": "?"}[
+            row["direction"]]
+        print(f"# {row['status']:>9}  {row['name']}: "
+              f"{row['base']:.3f} -> {row['cur']:.3f} "
+              f"(x{row['ratio']:.2f}, better={arrow})", flush=True)
+    for name in report["missing"]:
+        print(f"#   missing  {name}: in baseline, not produced by this run",
+              flush=True)
+    n_reg = len(report["regressions"])
+    print(f"# compare: {len(report['rows'])} metrics, "
+          f"{n_reg} regression(s)"
+          + (f": {report['regressions']}" if n_reg else ""), flush=True)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--compare", action="store_true",
+                    help="diff this run's results against the committed "
+                         "BENCH_qac.json (loaded BEFORE the run, so the "
+                         "merge-on-write cannot mask a regression) and "
+                         "exit nonzero on any metric past tolerance")
+    ap.add_argument("--compare-report-only", action="store_true",
+                    help="with --compare: print the diff but never fail "
+                         "the run (the default CI stage, where host noise "
+                         "must not block merges)")
+    ap.add_argument("--compare-tolerance", type=float, default=0.5,
+                    help="relative move in the bad direction that counts "
+                         "as a regression (default 0.5 = 50%%)")
+    ap.add_argument("--inject-regression", default=None, metavar="NAME",
+                    help="testing hook: after the run, overwrite metric "
+                         "NAME with a synthetically regressed value so the "
+                         "gate's failure path can be exercised end-to-end")
     args = ap.parse_args()
     if args.quick:
         os.environ["BENCH_QUICK"] = "1"
+    baseline = _load_baseline() if args.compare else {}
+    if args.compare and not baseline:
+        print("# compare: no committed BENCH_qac.json to diff against",
+              flush=True)
     failures = 0
     for mod in MODULES:
         if args.only and args.only not in mod:
@@ -55,9 +104,31 @@ def main() -> None:
         except Exception:
             failures += 1
             print(f"# {mod} FAILED:\n{traceback.format_exc()}", flush=True)
-    from benchmarks.common import RESULTS, write_bench_json
+    from benchmarks.common import (RESULTS, compare_results, metric_direction,
+                                   write_bench_json)
 
-    if RESULTS:
+    if args.inject_regression:
+        name = args.inject_regression
+        base = baseline.get(name, RESULTS.get(name))
+        if base is None:
+            print(f"# inject-regression: {name} not in baseline or results",
+                  flush=True)
+            sys.exit(2)
+        # move the metric far past any tolerance in its bad direction
+        bad = (base * 10.0 if metric_direction(name) != "higher"
+               else base / 10.0)
+        RESULTS[name] = float(bad)
+        print(f"# inject-regression: {name} {base:.3f} -> {bad:.3f}",
+              flush=True)
+    if args.compare and baseline:
+        report = compare_results(RESULTS, baseline,
+                                 tolerance=args.compare_tolerance)
+        _print_compare(report, args.compare_tolerance)
+        if report["regressions"] and not args.compare_report_only:
+            failures += 1
+    # the injected regression is synthetic — never write it into the
+    # committed trajectory
+    if RESULTS and not args.inject_regression:
         write_bench_json()
     if failures:
         sys.exit(1)

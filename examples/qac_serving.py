@@ -18,7 +18,12 @@ build a ~20k-completion index, then serve keystroke traffic two ways —
     microseconds, answers are exact k-way merges of both tiers, a
     mid-trace rebuild-and-swap installs the next generation (caches
     invalidate exactly once), and sampled answers are verified
-    bit-identical to from-scratch rebuilds at their visible versions.
+    bit-identical to from-scratch rebuilds at their visible versions;
+  part 5 (ISSUE 10): OBSERVABILITY — part 2's trace replayed with request
+    tracing on (1/4 sampling): still bit-identical, and the spans alone
+    reconstruct where the latency went — a per-stage budget table, the
+    slowest sampled request's waterfall, and the multi-window SLO
+    burn-rate summary over the 50 ms interactive objective.
 
   PYTHONPATH=src python examples/qac_serving.py
 """
@@ -183,3 +188,39 @@ print(f"live index: {fs['delta_hit_answers']} answers carried delta-tier "
 n_checked = gq.check_parity(fresh, sample_every=max(1, len(fresh) // 100))
 print(f"live index: {n_checked} sampled answers bit-identical to "
       f"from-scratch rebuilds at their visible (generation, seq) versions")
+
+# -- part 5: observability (ISSUE 10) ----------------------------------------
+# Part 2's trace again, now with the obs stack live: a Tracer samples 1/4
+# of requests into span trees on the same virtual clock the scheduler runs
+# on (root `request` = [arrival, completion]; children queue.wait +
+# engine.service or the cache.* hit). Tracing is passive — answers stay
+# bit-identical — yet the spans alone tell the whole latency story.
+from repro.obs import SLOMonitor, Tracer
+from repro.obs.tracing import request_trees
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from scripts.obs_report import print_stage_table, print_waterfall, stage_table
+
+tracer = Tracer(sample_every=4)
+rt_obs = QACOnlineRuntime(rt.fe,                # warm since part 2
+                          RuntimeConfig(max_batch=64, slack_us=20_000.0),
+                          tracer=tracer)
+rows_obs = rt_obs.run_trace(reqs)
+assert all(np.array_equal(g, w) for g, w in zip(rows_obs, rows))
+trees = request_trees(tracer.spans)
+print(f"\nobserve: {len(tracer.spans)} spans over {len(trees)} sampled "
+      f"requests (1/4 sampling); answers bit-identical with tracing on")
+print("observe: per-stage latency budget (sampled requests)")
+print_stage_table(stage_table(trees))
+root, kids = max(trees.values(), key=lambda t: t[0]["dur_us"])
+print("observe: slowest sampled request waterfall")
+print_waterfall(root, kids)
+
+slo = SLOMonitor(target_us=50_000.0, objective=0.999)
+for idx, done in sorted(rt_obs.done_t_us.items(), key=lambda kv: kv[1]):
+    slo.observe(done, done - reqs[idx].t_us)
+ev = slo.evaluate()
+worst = max((a["long_burn"] or 0.0) for a in ev["alerts"])
+print(f"observe: SLO 50ms @ 99.9% — compliance "
+      f"{ev['compliance']:.4f} over {ev['n_requests']} requests, "
+      f"worst long-window burn {worst:.2f}x budget, "
+      f"{'FIRING' if ev['firing'] else 'no alert firing'}")

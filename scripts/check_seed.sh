@@ -28,7 +28,19 @@
 #      delta-tier hits, and exactly-once cache invalidation per swap;
 #   8. quick-mode freshness bench (apply/swap-stall latency, post-swap
 #      hit-rate-recovery >= 0.5x gate, merged-vs-immutable <= 1.5x gate;
-#      merges into BENCH_qac.json).
+#      merges into BENCH_qac.json);
+#   9. observability smoke: the online trace again with tracing + the
+#      jit-variant auditor on (`--online --observe --check`), asserting
+#      bit-parity with tracing enabled, every sampled request tree's
+#      queue.wait + engine.service == its recorded e2e latency, and a
+#      closed jit-variant space (zero post-freeze compiles) — plus
+#      `scripts/obs_report.py --check` on the exported trace (e2e p99
+#      rebuilt from child spans within 5% of the root-span p99);
+#  10. bench regression report: `benchmarks.run --compare` in report-only
+#      mode diffs this machine's quick-mode numbers against the committed
+#      BENCH_qac.json trajectory (never fails the gate — host noise — but
+#      makes an accidental order-of-magnitude regression visible in CI
+#      logs; the enforcing `--compare` without report-only is for perf PRs).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -75,6 +87,25 @@ python -m repro.launch.serve --freshness --check --queries 2000 \
 
 echo "== quick-mode freshness benchmark (apply/swap/recovery gates) =="
 BENCH_QUICK=1 python -m benchmarks.bench_qac_freshness
+
+echo "== observability smoke: tracing + jit audit + span-identity check =="
+# the online trace with the obs stack live; --check asserts tracing
+# bit-parity, the queue.wait + engine.service == e2e span identity on
+# every sampled request, and zero post-freeze jit compiles; obs_report
+# --check then rebuilds e2e p99 from the exported spans alone (5% tol)
+OBS_TRACE="$(mktemp --suffix=.jsonl)"
+python -m repro.launch.serve --online --observe --check --queries 3000 \
+    --sessions 64 --slack-us 5000 --trace-sample 4 --trace-out "$OBS_TRACE"
+python scripts/obs_report.py "$OBS_TRACE" --check
+rm -f "$OBS_TRACE"
+
+echo "== bench regression report vs committed BENCH_qac.json =="
+# report-only: prints the per-metric diff + any would-be regressions
+# without failing the seed gate (quick-mode numbers on a shared host are
+# too noisy to block on; the enforcing mode is `--compare` without
+# `--compare-report-only` on a quiet machine)
+python -m benchmarks.run --quick --compare --compare-report-only \
+    --only qac_obs
 
 echo "bench json: $(pwd)/BENCH_qac.json"
 echo "check_seed: OK"

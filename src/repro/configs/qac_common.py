@@ -79,6 +79,12 @@ class QACArch:
     # by FreshnessConfig.__post_init__).
     freshness_delta_capacity: int = 4096
     freshness_swap_threshold: int = 1024
+    # observability (serve + obs, ISSUE 10): trace 1/N of requests (the
+    # acceptance bench holds p99 overhead <= 10% at 16) and evaluate SLO
+    # burn against the paper-motivated 50ms interactive SLA at three-nines.
+    obs_trace_sample_every: int = 16
+    obs_slo_target_us: float = 50_000.0
+    obs_slo_objective: float = 0.999
 
     family = "qac"
 
@@ -119,6 +125,17 @@ class QACArch:
             k=self.k,
             delta_capacity=self.freshness_delta_capacity,
             swap_threshold=self.freshness_swap_threshold,
+        )
+
+    def obs_config(self):
+        """The arch's observability knobs as an ``ObsConfig`` — tracer
+        sampling stride + the SLO the burn-rate monitor evaluates."""
+        from ..obs import ObsConfig
+
+        return ObsConfig(
+            trace_sample_every=self.obs_trace_sample_every,
+            slo_target_us=self.obs_slo_target_us,
+            slo_objective=self.obs_slo_objective,
         )
 
     def cells(self):

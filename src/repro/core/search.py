@@ -327,6 +327,44 @@ def _resolve_packed(index: InvertedIndex, postings_codec: str | None):
     return packed
 
 
+def describe_single_route(index: InvertedIndex, rmq_minimal: RangeMin, *,
+                          use_kernel: bool = False,
+                          heap_kernel: bool | None = None,
+                          postings_codec: str | None = None,
+                          heap_kernel_max_bytes: int | None = None) -> str:
+    """Host-side description of the single-term route
+    ``single_term_topk_bounded_batch`` will take (ISSUE 10 tracing): the
+    routing below is STATIC — a pure function of index shapes and knobs,
+    decided at trace time — so observability can name it without running
+    the engine. Mirrors the routing block in
+    ``single_term_topk_bounded_batch`` and must stay in sync with it.
+    Returns e.g. ``"heap_topk[raw]"``, ``"heap_topk[ef]"``,
+    ``"per_pop_rmq[kernel]"``, ``"per_pop_rmq[xla]"``.
+    """
+    packed = _resolve_packed(index, postings_codec)
+    explicit = postings_codec not in (None, "auto", "raw")
+    if heap_kernel is None:
+        heap_kernel = False
+        if use_kernel:
+            fit_raw = _heap_kernel_fits(index, rmq_minimal,
+                                        max_bytes=heap_kernel_max_bytes)
+            fit_pk = packed is not None and _heap_kernel_fits(
+                index, rmq_minimal, packed=packed,
+                max_bytes=heap_kernel_max_bytes)
+            if explicit:
+                heap_kernel = fit_pk
+            elif fit_raw:
+                heap_kernel, packed = True, None
+            elif fit_pk:
+                heap_kernel = True
+    elif heap_kernel and not explicit:
+        packed = None
+    if heap_kernel:
+        codec = packed.codec if packed is not None else "raw"
+        return f"heap_topk[{codec}]"
+    return f"per_pop_rmq[{'kernel' if use_kernel else 'xla'}]"
+
+
 def single_term_topk_bounded_batch(index: InvertedIndex,
                                    rmq_minimal: RangeMin, term_lo, term_hi,
                                    k: int, trips: int, *,

@@ -48,12 +48,52 @@ from repro.text import (SynthLogConfig, generate_query_log,
 from repro.core import build_qac_index, parse_queries, corpus_stats, INF_DOCID
 from repro.core.builder import build_corpus
 from repro.core.striped import build_striped
+from repro.obs.metrics import fmt
 from repro.serve.qac import qac_serve_step, qac_serve_striped
 from repro.serve.frontend import QACFrontend
 from repro.serve.runtime import (QACOnlineRuntime,
                                  prepare_requests, run_naive_trace)
 from repro.configs.qac_common import QACArch
 from repro.core.strings import decode_string
+
+
+def _make_obs(args):
+    """The ``--observe`` stack from the arch preset + CLI overrides:
+    (ObsConfig, Tracer, JitAuditor, MetricsRegistry)."""
+    import dataclasses
+
+    ocfg = QACArch(k=args.k).obs_config()
+    if args.trace_sample is not None:
+        ocfg = dataclasses.replace(ocfg,
+                                   trace_sample_every=args.trace_sample)
+    tracer = ocfg.tracer()
+    auditor = ocfg.auditor(tracer=tracer)
+    registry = ocfg.registry()
+    registry.register_collector("jit", auditor.snapshot)
+    return ocfg, tracer, auditor, registry
+
+
+def _export_trace(args, tracer) -> None:
+    if not args.trace_out:
+        return
+    if args.trace_out.endswith(".jsonl"):
+        path, kind = tracer.to_jsonl(args.trace_out), "jsonl"
+    else:
+        path, kind = tracer.to_chrome(args.trace_out), "chrome"
+    print(f"[serve] observe: wrote {kind} trace ({len(tracer.spans)} spans,"
+          f" {len(tracer.instants)} instants) to {path}")
+
+
+def _print_slo(ocfg, slo) -> None:
+    ev = slo.evaluate()
+    worst = max((a for a in ev["alerts"] if a["long_burn"] is not None),
+                key=lambda a: a["long_burn"], default=None)
+    print(f"[serve] observe SLO: {ev['n_violations']}/{ev['n_requests']} "
+          f"over {ocfg.slo_target_us / 1e3:.0f}ms "
+          f"(compliance={fmt(ev['compliance'], nd=4)} vs objective "
+          f"{ev['objective']}), firing={ev['firing']}"
+          + (f", worst long-window burn={worst['long_burn']:.2f} "
+             f"@{worst['long_window_us'] / 3.6e9:.1f}h" if worst else ""))
 
 
 def run_online(args, qidx, kept) -> None:
@@ -70,19 +110,51 @@ def run_online(args, qidx, kept) -> None:
         cfg.max_batch = args.max_batch
     if args.slack_us is not None:
         cfg.slack_us = args.slack_us
+    ocfg = tracer = auditor = registry = None
+    if args.observe:
+        ocfg, tracer, auditor, registry = _make_obs(args)
     # closed jit-variant space for online traffic: global list_pad, no
     # per-bucket specialization (see QACFrontend.specialize_list_pad)
-    frontend = QACFrontend(qidx, k=args.k, specialize_list_pad=False)
-    rt = QACOnlineRuntime(frontend, cfg)
-    results = rt.replay(reqs)
+    frontend = QACFrontend(qidx, k=args.k, specialize_list_pad=False,
+                           auditor=auditor)
+    rt = QACOnlineRuntime(frontend, cfg, tracer=tracer, registry=registry)
+    if args.observe:
+        # the measured-replay protocol with the obs twist: the warm pass
+        # compiles every jit variant the trace can form, then the trace is
+        # cleared and the auditor frozen, so the measured pass is steady
+        # state BY ASSERTION (any further compile is a flagged violation)
+        rt.warmup(reqs)
+        rt.run_trace(reqs)
+        rt.reset()
+        tracer.clear()
+        auditor.freeze()
+        results = rt.run_trace(reqs)
+    else:
+        results = rt.replay(reqs)
     s = rt.telemetry.snapshot()
-    print(f"[serve] online: p50={s['p50_us']:.0f}us p95={s['p95_us']:.0f}us "
-          f"p99={s['p99_us']:.0f}us mean={s['mean_us']:.0f}us "
+    print(f"[serve] online: p50={fmt(s['p50_us'])}us "
+          f"p95={fmt(s['p95_us'])}us p99={fmt(s['p99_us'])}us "
+          f"mean={fmt(s['mean_us'])}us "
           f"hit_rate={s['cache_hit_rate']:.2f} paths={s['paths']}")
     print(f"[serve] online: {s['n_batches']} batches "
-          f"(mean size {s['mean_batch_size']:.1f}, hist {s['batch_hist']}), "
+          f"(mean size {fmt(s['mean_batch_size'], nd=1)}, "
+          f"hist {s['batch_hist']}), "
           f"triggers={s['triggers']}, queue_peak={s['queue_peak']}, "
           f"engine_wall={s['engine_wall_us']/1e3:.1f}ms")
+    if args.observe:
+        aud = auditor.snapshot()
+        print(f"[serve] observe: {len(tracer.spans)} spans + "
+              f"{len(tracer.instants)} instants at 1/"
+              f"{tracer.sample_every} sampling; jit variants="
+              f"{aud['n_variants']} (compile wall "
+              f"{aud['compile_wall_us_total']/1e3:.0f}ms, all pre-freeze), "
+              f"post-freeze compiles={aud['n_violations']}")
+        slo = ocfg.slo_monitor()
+        for r in reqs:
+            done = rt.done_t_us[r.idx]
+            slo.observe(done, done - r.t_us)
+        _print_slo(ocfg, slo)
+        _export_trace(args, tracer)
     if args.check:
         # same (warm) frontend: complete() is pure, so the reference is
         # identical and the B=1 jit variants aren't compiled twice
@@ -92,10 +164,29 @@ def run_online(args, qidx, kept) -> None:
                 f"online-runtime parity break at request {i} "
                 f"({reqs[i].query!r}): {g} != {w}")
         assert s["cache_hit_rate"] > 0, "expected a nonzero cache hit rate"
+        if args.observe:
+            from repro.obs.tracing import request_trees
+
+            assert tracer.spans, "observe produced no spans"
+            # zero unexpected compiles in steady state: the warm pass must
+            # have closed the jit-variant space
+            auditor.assert_closed()
+            # every sampled root span's duration is the telemetry latency
+            # for that request, exactly (same clock arithmetic)
+            trees = request_trees(tracer.spans)
+            assert trees, "observe produced no request roots"
+            for idx, (root, _) in trees.items():
+                lat = rt.done_t_us[idx] - reqs[idx].t_us
+                assert abs(root["dur_us"] - lat) < 1e-6, (
+                    f"request {idx}: root span {root['dur_us']}us vs "
+                    f"telemetry {lat}us")
+            print(f"[serve] observe check OK: {len(trees)} sampled request "
+                  f"trees match telemetry; jit-variant space closed "
+                  f"({aud['n_variants']} variants, 0 post-freeze)")
         print(f"[serve] online check OK: {len(reqs)} requests bit-identical "
               f"to one-request-per-dispatch serving "
-              f"(naive mean={naive['mean_us']:.0f}us, "
-              f"speedup={naive['mean_us']/max(s['mean_us'], 1e-9):.2f}x)")
+              f"(naive mean={fmt(naive['mean_us'])}us, "
+              f"speedup={(naive['mean_us'] or 0)/max(s['mean_us'] or 1e-9, 1e-9):.2f}x)")
 
 
 def run_cluster(args, qidx, kept) -> None:
@@ -124,28 +215,50 @@ def run_cluster(args, qidx, kept) -> None:
         t_up = t_kill + 2 * cl_cfg.heartbeat_timeout_us
         injector = FaultInjector([], replica_faults=[
             ReplicaFault(0, t_kill, t_up)])
+    ocfg = tracer = auditor = registry = None
+    if args.observe:
+        ocfg, tracer, auditor, registry = _make_obs(args)
     # ONE warm frontend shared by every replica: complete() is pure, so
     # sharing cannot change results, and the jit variants compile once
-    frontend = QACFrontend(qidx, k=args.k, specialize_list_pad=False)
+    frontend = QACFrontend(qidx, k=args.k, specialize_list_pad=False,
+                           auditor=auditor)
     cluster = QACServingCluster(qidx, cl_cfg, rt_cfg,
                                 frontends=[frontend] * args.cluster,
-                                injector=injector)
+                                injector=injector, tracer=tracer,
+                                registry=registry)
     print(f"[serve] cluster: {args.cluster} replicas, {len(reqs)} requests, "
           f"{sum(s == 'bulk' for s in sla)} bulk"
           + (f", drill kill@{t_kill/1e3:.0f}ms up@{t_up/1e3:.0f}ms"
              if args.drill else ""))
-    results = cluster.replay(reqs, sla)
+    if args.observe:
+        cluster.run_trace(reqs, sla)         # warm pass compiles everything
+        cluster.reset()
+        tracer.clear()
+        auditor.freeze()
+        results = cluster.run_trace(reqs, sla)
+    else:
+        results = cluster.replay(reqs, sla)
     s = cluster.telemetry.snapshot()
     print(f"[serve] cluster: served={s['served']} rejected={s['rejected']} "
           f"(shed_rate={s['shed_rate']:.3f}, degrade_rate="
           f"{s['degrade_rate']:.3f}) per_replica={s['per_replica']}")
-    print(f"[serve] cluster: interactive p50={s['interactive_p50_us']:.0f}us "
-          f"p99={s['interactive_p99_us']:.0f}us | bulk "
-          f"p99={s['bulk_p99_us']:.0f}us | sheds={s['shed']}")
+    print(f"[serve] cluster: interactive p50={fmt(s['interactive_p50_us'])}"
+          f"us p99={fmt(s['interactive_p99_us'])}us | bulk "
+          f"p99={fmt(s['bulk_p99_us'])}us | sheds={s['shed']}")
     if args.drill:
         print(f"[serve] cluster: deaths={s['deaths']} "
               f"readmissions={s['readmissions']} rerouted={s['rerouted']} "
-              f"failover_p99={s['failover_p99_us']:.0f}us")
+              f"failover_p99={fmt(s['failover_p99_us'])}us")
+    if args.observe:
+        n_adm = sum(1 for e in tracer.instants if e["name"] == "admission")
+        print(f"[serve] observe: {len(tracer.spans)} spans + "
+              f"{len(tracer.instants)} instants ({n_adm} admission "
+              f"decisions sampled); post-freeze compiles="
+              f"{len(auditor.violations)}")
+        _export_trace(args, tracer)
+        if args.check:
+            assert tracer.spans, "observe produced no spans"
+            auditor.assert_closed()
     if args.check:
         n = check_cluster_parity(frontend, reqs, results)
         assert n > 0, "no served results to check"
@@ -190,8 +303,22 @@ def run_freshness(args, kept, kscores) -> None:
     n_req = sum(1 for e in events if e.kind == "request")
     print(f"[serve] freshness trace: {n_req} requests + "
           f"{len(events) - n_req} mutations, swap_threshold={swap_thr}")
-    gq = GenerationalQAC(kept, kscores, cfg=fr_cfg, rt_cfg=rt_cfg)
-    results = gq.replay(events)
+    tracer = registry = None
+    if args.observe:
+        # no jit auditor here: a mid-trace rebuild-and-swap legitimately
+        # compiles the new generation's variants (billed to the background
+        # rebuild), so the closed-variant invariant is per-generation, not
+        # per-trace — the tracer's generation.rebuild spans carry the cost
+        _, tracer, _, registry = _make_obs(args)
+    gq = GenerationalQAC(kept, kscores, cfg=fr_cfg, rt_cfg=rt_cfg,
+                         tracer=tracer, registry=registry)
+    if args.observe:
+        gq.run_mutation_trace(events)        # warm pass
+        gq.reset()
+        tracer.clear()
+        results = gq.run_mutation_trace(events)
+    else:
+        results = gq.replay(events)
     s = gq.snapshot()
     rts = s["runtime"]
     print(f"[serve] freshness: generation={s['generation']} "
@@ -204,6 +331,14 @@ def run_freshness(args, kept, kscores) -> None:
           f"hit_rate={rts['cache_hit_rate']:.2f}")
     print(f"[serve] freshness: per_generation={rts['per_generation']} "
           f"invalidations={rts['invalidations']}")
+    if args.observe:
+        merges = sum(1 for sp in tracer.spans if sp["name"] == "merge.kway")
+        print(f"[serve] observe: {len(tracer.spans)} spans + "
+              f"{len(tracer.instants)} instants ({merges} k-way merges "
+              f"sampled)")
+        _export_trace(args, tracer)
+        if args.check:
+            assert tracer.spans, "observe produced no spans"
     if args.check:
         assert s["n_swaps"] >= 1, "trace produced no generation swap"
         assert s["delta_hit_answers"] > 0, \
@@ -265,6 +400,21 @@ def main():
                     help="--freshness: visible delta changes before a "
                          "rebuild-and-swap (default: ~mutations/3, so a "
                          "default trace swaps at least once)")
+    ap.add_argument("--observe", action="store_true",
+                    help="attach the observability stack (request tracing, "
+                         "metrics registry, jit-variant audit, SLO burn "
+                         "monitor) to --online/--cluster/--freshness; with "
+                         "--check also asserts nonzero spans, a closed "
+                         "jit-variant space in steady state, and span/"
+                         "telemetry agreement")
+    ap.add_argument("--trace-out", default=None,
+                    help="--observe: write the measured pass's trace "
+                         "(.jsonl = span records for scripts/obs_report.py;"
+                         " any other suffix = Chrome/Perfetto trace-event "
+                         "JSON for chrome://tracing)")
+    ap.add_argument("--trace-sample", type=int, default=None,
+                    help="--observe: trace every Nth request (default: "
+                         "QACArch.obs_trace_sample_every)")
     args = ap.parse_args()
 
     print(f"[serve] generating {args.queries} synthetic scored queries ...")

@@ -1,0 +1,128 @@
+"""Jit-variant auditor: make every compile visible, assert none mid-trace.
+
+The serving stack's p99 story rests on a *closed jit-variant space*: the
+frontend's pow2 batch/k buckets plus ``specialize_list_pad=False`` mean a
+warmed deployment never compiles again, because a mid-trace XLA compile
+(tens of ms) is billed to the virtual clock right on the serving path — a
+p99 cliff. Until now that invariant was enforced only by construction;
+this auditor makes it *observable* and *assertable* online:
+
+  * ``wrap(key, fn)`` — the frontend wraps every newly-minted jit callable;
+    the wrapper times the first invocation (which is where XLA compiles)
+    with a block-until-ready and records ``(key, wall_us, frozen?)``.
+    After the first call the wrapper is a dict-hit + passthrough.
+  * ``freeze()`` — called when warmup ends. Every compile recorded after
+    the freeze is a VIOLATION of the closed-variant invariant; ``strict``
+    mode raises on the spot, default mode accumulates them for
+    ``assert_closed()`` / the ``--observe --check`` launcher gate.
+
+The negative control lives in ``benchmarks/bench_qac_obs.py``: a frontend
+with ``specialize_list_pad=True`` (the open-variant config the online
+stack forbids) must produce >= 1 flagged mid-trace compile on the same
+trace a closed frontend serves with zero.
+"""
+from __future__ import annotations
+
+import time
+
+
+class JitAuditError(AssertionError):
+    """A jit variant compiled after ``freeze()`` in strict mode."""
+
+
+class JitAuditor:
+    """Records every new jit-cache variant (key + first-call wall time)
+    and enforces the closed-variant invariant after ``freeze()``."""
+
+    def __init__(self, *, strict: bool = False, tracer=None):
+        self.strict = strict
+        self.tracer = tracer      # optional: compile instants in the trace
+        self.compiles: list[dict] = []   # {key, wall_us, frozen}
+        self.seen: set = set()
+        self.frozen = False
+
+    def wrap(self, key, fn, *, label: str | None = None):
+        """Wrap a fresh jit callable so its first invocation is timed and
+        recorded. Must be called at most once per key (the frontend's jit
+        cache guarantees it)."""
+        state = {"first": True}
+
+        def wrapped(*args, **kwargs):
+            if state["first"]:
+                state["first"] = False
+                t0 = time.perf_counter()
+                out = fn(*args, **kwargs)
+                _block(out)
+                self.record(key, (time.perf_counter() - t0) * 1e6,
+                            label=label)
+                return out
+            return fn(*args, **kwargs)
+
+        return wrapped
+
+    def record(self, key, wall_us: float, *, label: str | None = None):
+        """One new variant materialized (first call = compile + run)."""
+        entry = {"key": _keyrepr(key), "wall_us": float(wall_us),
+                 "frozen": self.frozen}
+        if label:
+            entry["label"] = label
+        self.compiles.append(entry)
+        self.seen.add(_keyrepr(key))
+        if self.tracer is not None:
+            self.tracer.instant("jit.compile", 0.0, cat="jit",
+                                key=_keyrepr(key), wall_us=float(wall_us),
+                                frozen=self.frozen)
+        if self.frozen and self.strict:
+            raise JitAuditError(
+                f"jit variant {key!r} compiled after freeze() "
+                f"({wall_us / 1e3:.1f}ms) — the closed-variant invariant "
+                f"is broken")
+
+    def freeze(self):
+        """Warmup is over: any compile from here on is a violation."""
+        self.frozen = True
+
+    @property
+    def violations(self) -> list[dict]:
+        return [c for c in self.compiles if c["frozen"]]
+
+    def assert_closed(self):
+        """Raise unless zero variants compiled after freeze()."""
+        bad = self.violations
+        if bad:
+            keys = [c["key"] for c in bad]
+            raise JitAuditError(
+                f"{len(bad)} jit variant(s) compiled after freeze(): "
+                f"{keys[:5]}")
+
+    def snapshot(self) -> dict:
+        """Stable schema for the metrics registry."""
+        return {
+            "n_variants": len(self.compiles),
+            "n_violations": len(self.violations),
+            "frozen": self.frozen,
+            "compile_wall_us_total": float(
+                sum(c["wall_us"] for c in self.compiles)),
+            "compiles": [dict(c) for c in self.compiles],
+        }
+
+
+def _keyrepr(key):
+    """Stable, JSON-able rendering of a jit-cache key."""
+    if isinstance(key, tuple):
+        return tuple(_keyrepr(k) for k in key)
+    if isinstance(key, (str, int, float, bool)) or key is None:
+        return key
+    return repr(key)
+
+
+def _block(out):
+    """Block until a pytree of jax arrays is ready (first-call timing must
+    include the XLA compile + execute, not just dispatch)."""
+    try:
+        import jax
+
+        jax.block_until_ready(out)
+    except Exception:
+        # non-array outputs (host fallbacks) are already synchronous
+        pass

@@ -1,0 +1,153 @@
+"""Unified metrics: ONE percentile implementation + a process-wide registry.
+
+Before this module, every serving layer hand-rolled its own quantile math
+(``RuntimeTelemetry.snapshot``, ``ClusterTelemetry._pct``,
+``GenerationalQAC.snapshot``, the freshness bench) — three copies of the
+same ``np.percentile`` call with three different empty-input behaviors,
+one of which (silently reporting 0.0 latency for a window that served
+nothing) is exactly the failure mode an SLA argument cannot afford.
+
+``percentiles`` is the one copy now: pinned to ``np.percentile`` semantics
+verbatim (tests assert equality against numpy, not approximation) and
+explicit about emptiness — an empty input yields ``None`` for every
+statistic, never a fabricated zero. Callers that print snapshots use
+``fmt`` to render the ``None``.
+
+``MetricsRegistry`` is the aggregation point: counters, gauges, and
+exact-reservoir histograms for ad-hoc instrumentation, plus *collectors* —
+named snapshot callables the serving layers register
+(``RuntimeTelemetry``, ``ClusterTelemetry``, freshness counters, the jit
+auditor) so one ``registry.snapshot()`` returns the whole serving stack's
+state under a stable schema: top-level keys ``counters`` / ``gauges`` /
+``histograms`` / ``collectors``, histogram sub-dicts always carrying
+``n`` / ``mean`` / ``max`` / ``p50`` / ``p95`` / ``p99`` (None when
+empty). Downstream tooling (obs_report, the bench regression gate) reads
+this schema and nothing else.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+DEFAULT_QS = (50, 95, 99)
+
+
+def percentiles(values, qs=DEFAULT_QS, *, suffix: str = "_us",
+                mean: bool = False, vmax: bool = False) -> dict:
+    """``{f"p{q}{suffix}": float | None}`` pinned to ``np.percentile``.
+
+    The ONE quantile implementation for the repo (ISSUE 10 satellite):
+    nonempty input -> ``float(np.percentile(values, q))`` verbatim, so the
+    pinning tests in test_serve_runtime/test_serve_cluster hold by
+    construction; empty input -> explicit ``None`` per key — a zero-traffic
+    window reports "no data", never a fake 0us latency. ``mean``/``vmax``
+    add ``mean{suffix}`` / ``max{suffix}`` under the same rule.
+    """
+    vals = np.asarray(list(values), np.float64)
+    out: dict = {}
+    if vals.size == 0:
+        for q in qs:
+            out[f"p{q}{suffix}"] = None
+        if mean:
+            out[f"mean{suffix}"] = None
+        if vmax:
+            out[f"max{suffix}"] = None
+        return out
+    for q in qs:
+        out[f"p{q}{suffix}"] = float(np.percentile(vals, q))
+    if mean:
+        out[f"mean{suffix}"] = float(vals.mean())
+    if vmax:
+        out[f"max{suffix}"] = float(vals.max())
+    return out
+
+
+def fmt(v, scale: float = 1.0, nd: int = 0, unit: str = "") -> str:
+    """Render a possibly-``None`` statistic: ``fmt(None) == "n/a"``.
+
+    Snapshot consumers (launcher prints, examples) must survive the
+    explicit-None contract above; this is the one formatting helper they
+    share instead of each guarding f-strings.
+    """
+    if v is None:
+        return "n/a"
+    return f"{v / scale:.{nd}f}{unit}"
+
+
+class Histogram:
+    """Exact-reservoir histogram: every observation is kept verbatim up to
+    ``capacity`` (so percentiles are exact, not sketched); past capacity
+    the count/sum/max stay exact and the reservoir stops growing (the
+    snapshot marks itself ``truncated``)."""
+
+    def __init__(self, capacity: int = 1 << 16):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.values: list[float] = []
+        self.n = 0
+        self.total = 0.0
+        self.vmax: float | None = None
+
+    def observe(self, v: float):
+        v = float(v)
+        self.n += 1
+        self.total += v
+        self.vmax = v if self.vmax is None else max(self.vmax, v)
+        if len(self.values) < self.capacity:
+            self.values.append(v)
+
+    def snapshot(self) -> dict:
+        out = {"n": self.n,
+               "mean": (self.total / self.n) if self.n else None,
+               "max": self.vmax}
+        out.update(percentiles(self.values, suffix=""))
+        if self.n > len(self.values):
+            out["truncated"] = True
+        return out
+
+
+class MetricsRegistry:
+    """Counters + gauges + exact-reservoir histograms + named collectors.
+
+    One registry per serving deployment; every layer registers its
+    telemetry snapshot as a collector so ``snapshot()`` is the single
+    machine-readable view of the stack (stable schema, see module
+    docstring).
+    """
+
+    def __init__(self, *, hist_capacity: int = 1 << 16):
+        self._hist_capacity = int(hist_capacity)
+        self.counters: dict[str, float] = {}
+        self.gauges: dict[str, float] = {}
+        self.histograms: dict[str, Histogram] = {}
+        self._collectors: dict[str, object] = {}
+
+    def counter(self, name: str, inc: float = 1):
+        self.counters[name] = self.counters.get(name, 0) + inc
+
+    def gauge(self, name: str, value: float):
+        self.gauges[name] = float(value)
+
+    def observe(self, name: str, value: float):
+        h = self.histograms.get(name)
+        if h is None:
+            h = self.histograms[name] = Histogram(self._hist_capacity)
+        h.observe(value)
+
+    def register_collector(self, name: str, snapshot_fn):
+        """Register a zero-arg callable returning a dict; re-registering a
+        name replaces it (a reset layer re-registers its fresh telemetry).
+        """
+        if not callable(snapshot_fn):
+            raise TypeError(f"collector {name!r} must be callable")
+        self._collectors[name] = snapshot_fn
+
+    def snapshot(self) -> dict:
+        return {
+            "counters": dict(self.counters),
+            "gauges": dict(self.gauges),
+            "histograms": {k: h.snapshot()
+                           for k, h in sorted(self.histograms.items())},
+            "collectors": {k: fn() for k, fn in
+                           sorted(self._collectors.items())},
+        }

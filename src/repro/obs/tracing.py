@@ -1,0 +1,168 @@
+"""Request tracing on the serving stack's virtual microsecond clock.
+
+A ``Tracer`` records *spans* (named intervals with explicit ids and parent
+links) and *instants* (point events) against the same virtual clock the
+runtime/cluster/freshness layers already schedule on — so a trace is a
+faithful picture of the simulated deployment, not of the host's wall
+clock. Span taxonomy (the contract obs_report and the tests rely on; see
+ROADMAP "Architecture invariants"):
+
+  request           root span per sampled request: [arrival, completion],
+                    attrs path/session/k/gen/query.
+    cache.trivial / cache.hit_exact / cache.hit_session
+                    hit-path child covering the whole request interval,
+                    attrs carry the cache-miss/hit reason.
+    queue.wait      miss-path child: [arrival, dispatch start].
+    engine.service  miss-path child: [dispatch start, batch completion].
+                    queue.wait + engine.service == the request's recorded
+                    end-to-end latency, EXACTLY (same clock arithmetic),
+                    which is how obs_report rebuilds p99 from spans alone.
+  batch.dispatch    one span per micro-batch (no request id), attrs
+                    size/trigger/jit keys/kernel routes actually taken.
+  merge.kway        freshness: per-answer delta merge, attrs
+                    n_delta/escalations/seq.
+  generation.rebuild / generation.swap_stall
+                    freshness: background fold-and-build vs the swap stall.
+  admission / replica.death / replica.readmit / generation.swap /
+  merge.escalate / delta.apply
+                    instants (cluster + freshness decision points).
+
+Zero overhead when disabled: layers hold ``tracer = None`` and every
+instrumentation site is behind ``if tracer is not None`` (plus per-request
+``want(idx)`` sampling — 1/N of requests carry spans, batch spans fire only
+when a sampled request is aboard). The acceptance bench
+(``bench_qac_obs``) holds online p99 at 1/16 sampling within 10% of
+tracing-off.
+
+Export: ``to_jsonl`` (one record per line, ``type`` = span|instant —
+what ``scripts/obs_report.py`` consumes) and ``to_chrome`` (Chrome/
+Perfetto trace-event JSON: ph="X" duration events + ph="i" instants,
+ts/dur in microseconds — load in chrome://tracing or ui.perfetto.dev).
+"""
+from __future__ import annotations
+
+import json
+
+
+class Tracer:
+    """Span/instant recorder with 1/N per-request sampling (module
+    docstring has the taxonomy and the zero-overhead contract)."""
+
+    def __init__(self, *, sample_every: int = 1, capacity: int = 1 << 20):
+        if sample_every < 1:
+            raise ValueError(f"sample_every must be >= 1, "
+                             f"got {sample_every}")
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.sample_every = int(sample_every)
+        self.capacity = int(capacity)
+        self.clear()
+
+    def clear(self):
+        """Drop recorded spans/instants (measured-replay protocol: clear
+        after the warm pass so the trace covers only the measured pass).
+        Ids keep advancing — parent links can never dangle across clears.
+        """
+        self.spans: list[dict] = []
+        self.instants: list[dict] = []
+        self.dropped = 0
+        self._next_id = getattr(self, "_next_id", 1)
+
+    def want(self, idx: int) -> bool:
+        """Is request ``idx`` sampled? (1/sample_every of the id space.)"""
+        return idx % self.sample_every == 0
+
+    def span(self, name: str, t0_us: float, dur_us: float, *,
+             cat: str = "serve", req: int | None = None,
+             parent: int | None = None, **attrs) -> int | None:
+        """Record one interval; returns its span id (parent for children),
+        or None once capacity is hit (counted in ``dropped``)."""
+        if len(self.spans) >= self.capacity:
+            self.dropped += 1
+            return None
+        sid = self._next_id
+        self._next_id += 1
+        self.spans.append({
+            "id": sid, "parent": parent, "name": name, "cat": cat,
+            "req": req, "t0_us": float(t0_us), "dur_us": float(dur_us),
+            "attrs": attrs,
+        })
+        return sid
+
+    def instant(self, name: str, t_us: float, *, cat: str = "serve",
+                req: int | None = None, **attrs):
+        if len(self.instants) >= self.capacity:
+            self.dropped += 1
+            return
+        self.instants.append({
+            "name": name, "cat": cat, "req": req, "t_us": float(t_us),
+            "attrs": attrs,
+        })
+
+    # -- export ---------------------------------------------------------------
+    def to_jsonl(self, path: str) -> str:
+        """One JSON record per line: spans (``type: "span"``) then
+        instants (``type: "instant"``) — the obs_report input format."""
+        with open(path, "w") as f:
+            for s in self.spans:
+                f.write(json.dumps({"type": "span", **s}) + "\n")
+            for e in self.instants:
+                f.write(json.dumps({"type": "instant", **e}) + "\n")
+        return path
+
+    def to_chrome(self, path: str) -> str:
+        """Chrome/Perfetto trace-event JSON. Requests map to tids so each
+        sampled request gets its own lane in the viewer; batch/cluster
+        events land on lane 0."""
+        events = []
+        for s in self.spans:
+            events.append({
+                "name": s["name"], "cat": s["cat"], "ph": "X",
+                "ts": s["t0_us"], "dur": s["dur_us"],
+                "pid": 0, "tid": s["req"] if s["req"] is not None else 0,
+                "args": dict(s["attrs"], span_id=s["id"],
+                             parent=s["parent"]),
+            })
+        for e in self.instants:
+            events.append({
+                "name": e["name"], "cat": e["cat"], "ph": "i", "s": "t",
+                "ts": e["t_us"], "pid": 0,
+                "tid": e["req"] if e["req"] is not None else 0,
+                "args": dict(e["attrs"]),
+            })
+        with open(path, "w") as f:
+            json.dump({"traceEvents": events,
+                       "displayTimeUnit": "ms"}, f)
+        return path
+
+
+def load_jsonl(path: str) -> tuple[list[dict], list[dict]]:
+    """Read a ``to_jsonl`` trace back -> (spans, instants)."""
+    spans, instants = [], []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            (spans if rec.get("type") == "span" else instants).append(rec)
+    return spans, instants
+
+
+def span_children(spans: list[dict]) -> dict:
+    """parent span id -> list of child spans (None key = roots)."""
+    out: dict = {}
+    for s in spans:
+        out.setdefault(s.get("parent"), []).append(s)
+    return out
+
+
+def request_trees(spans: list[dict]) -> dict:
+    """req idx -> (root request span, [child spans]) for every root named
+    ``request`` — the obs_report / invariant-test accessor."""
+    kids = span_children(spans)
+    out = {}
+    for root in kids.get(None, []):
+        if root["name"] == "request" and root.get("req") is not None:
+            out[root["req"]] = (root, kids.get(root["id"], []))
+    return out

@@ -80,6 +80,7 @@ from collections import Counter
 
 import numpy as np
 
+from ..obs.metrics import percentiles
 from ..runtime.fault import (FaultInjector, HeartbeatRegistry, ReplicaFault,
                              StepMonitor)
 from .frontend import QACFrontend
@@ -217,13 +218,9 @@ class ClusterTelemetry:
 
     @staticmethod
     def _pct(lat) -> dict:
-        a = np.asarray(lat if len(lat) else [0.0], np.float64)
-        return {
-            "p50_us": float(np.percentile(a, 50)),
-            "p95_us": float(np.percentile(a, 95)),
-            "p99_us": float(np.percentile(a, 99)),
-            "mean_us": float(a.mean()),
-        }
+        # the repo's ONE percentile implementation (obs.metrics): an SLA
+        # class that served nothing reports explicit None, never a fake 0us
+        return percentiles(lat, mean=True)
 
     def snapshot(self) -> dict:
         served = sum(len(v) for v in self.lat_us.values())
@@ -302,9 +299,17 @@ class QACServingCluster:
                  rt_cfg: RuntimeConfig | None = None, *,
                  frontends: list[QACFrontend] | None = None,
                  injector: FaultInjector | None = None,
-                 frontend_kwargs: dict | None = None):
+                 frontend_kwargs: dict | None = None,
+                 tracer=None, registry=None):
         self.cfg = cfg if cfg is not None else ClusterConfig()
         self.rt_cfg = rt_cfg if rt_cfg is not None else RuntimeConfig()
+        # observability (ISSUE 10): the tracer is shared with every replica
+        # runtime (reset() threads it through); admission/fault/swap
+        # decision points emit instants. None = no overhead.
+        self.tracer = tracer
+        if registry is not None:
+            registry.register_collector("cluster",
+                                        lambda: self.telemetry.snapshot())
         self.injector = injector if injector is not None else FaultInjector([])
         if frontends is None:
             if qidx is None:
@@ -335,8 +340,10 @@ class QACServingCluster:
     def reset(self):
         """Fresh cluster state (queues, caches, liveness, telemetry); the
         frontends' warm jit caches survive."""
-        self.replicas = [_Replica(i, QACOnlineRuntime(fe, self.rt_cfg))
-                         for i, fe in enumerate(self.frontends)]
+        self.replicas = [
+            _Replica(i, QACOnlineRuntime(fe, self.rt_cfg,
+                                         tracer=self.tracer))
+            for i, fe in enumerate(self.frontends)]
         self._now = 0.0
         self.registry = HeartbeatRegistry(
             timeout_s=self.cfg.heartbeat_timeout_us,
@@ -371,6 +378,10 @@ class QACServingCluster:
                     if now - last > self.cfg.heartbeat_timeout_us:
                         self.dead.add(rid)
                         self.telemetry.deaths.append((now, rid))
+                        if self.tracer is not None:
+                            self.tracer.instant(
+                                "replica.death", now, cat="cluster",
+                                replica=rid, kind=fault.kind)
                         self._failover(rep, now)
                 continue
             self.registry.beat(rid)
@@ -392,6 +403,9 @@ class QACServingCluster:
             if rid in self.dead:
                 self.dead.discard(rid)
                 self.telemetry.readmissions.append((now, rid))
+                if self.tracer is not None:
+                    self.tracer.instant("replica.readmit", now,
+                                        cat="cluster", replica=rid)
             for (q, sla, orig_t) in pending:
                 # re-admitted to the SAME replica (recovered before any
                 # re-route happened) — delayed, not rerouted
@@ -480,6 +494,12 @@ class QACServingCluster:
             self._reject(r, sla, "degrade_skip_multi", rerouted)
             return
         k = min(r.k, cfg.degraded_k) if degraded else r.k
+        tr = self.tracer
+        if tr is not None and tr.want(r.idx):
+            tr.instant("admission", now, cat="cluster", req=r.idx,
+                       decision="degrade" if degraded else "admit_full",
+                       est_wait_us=est, replica=rep.rid, sla=sla,
+                       k_served=k, rerouted=rerouted)
         self._meta[r.idx] = dict(replica=rep.rid, sla=sla, degraded=degraded,
                                  rerouted=rerouted, orig_t=orig_t,
                                  orig_k=r.k)
@@ -488,6 +508,11 @@ class QACServingCluster:
         rep.runtime.submit(r)
 
     def _reject(self, r: QACRequest, sla: str, reason: str, rerouted: bool):
+        tr = self.tracer
+        if tr is not None and tr.want(r.idx):
+            tr.instant("admission", self._now, cat="cluster", req=r.idx,
+                       decision="shed", reason=reason, sla=sla,
+                       rerouted=rerouted)
         self.telemetry.shed[(sla, reason)] += 1
         if rerouted:
             self.telemetry.rerouted += 1
@@ -547,6 +572,9 @@ class QACServingCluster:
         # a post-swap reset restarts on the NEW generation
         self.frontends = list(frontends)
         self.telemetry.swaps.append((self._now, generation))
+        if self.tracer is not None:
+            self.tracer.instant("generation.swap", self._now, cat="cluster",
+                                generation=generation)
 
     def drain(self):
         """End of trace: advance past the heartbeat timeout so any

@@ -77,6 +77,7 @@ import numpy as np
 from ..core.builder import build_qac_index, parse_queries
 from ..core.delta import DeltaIndex, MainCorpusView
 from ..core.types import INF_DOCID
+from ..obs.metrics import percentiles
 from .frontend import QACFrontend
 from .runtime import (QACOnlineRuntime, QACRequest, RuntimeConfig,
                       prepare_requests)
@@ -149,9 +150,16 @@ class GenerationalQAC:
     def __init__(self, queries, scores, *, cfg: FreshnessConfig | None = None,
                  rt_cfg: RuntimeConfig | None = None,
                  frontend_kwargs: dict | None = None,
-                 postings_codec: str | None = "ef"):
+                 postings_codec: str | None = "ef",
+                 tracer=None, registry=None):
         self.cfg = cfg if cfg is not None else FreshnessConfig()
         self.rt_cfg = rt_cfg if rt_cfg is not None else RuntimeConfig()
+        # observability (ISSUE 10): shared with the runtime (reset threads
+        # it through); merge/rebuild/swap emit their own spans here.
+        self.tracer = tracer
+        if registry is not None:
+            registry.register_collector("freshness",
+                                        lambda: self.snapshot())
         self._postings_codec = postings_codec
         self._fe_kwargs = dict(specialize_list_pad=False)
         self._fe_kwargs.update(frontend_kwargs or {})
@@ -177,7 +185,8 @@ class GenerationalQAC:
         self.history: dict[int, _Generation] = {
             0: self._make_generation(0, g0.qidx, g0.kept, g0.scores,
                                      g0.frontend)}
-        self.rt = QACOnlineRuntime(g0.frontend, self.rt_cfg)
+        self.rt = QACOnlineRuntime(g0.frontend, self.rt_cfg,
+                                   tracer=self.tracer)
         self.answers: dict[int, FreshResult] = {}
         self._req_by_idx: dict[int, QACRequest] = {}
         self._recent: deque = deque(maxlen=64)   # warm fodder for swaps
@@ -244,6 +253,10 @@ class GenerationalQAC:
             escalations += 1
             kprime = max(kprime * 2, 2)
             kprime = 1 << (kprime - 1).bit_length()
+            if self.tracer is not None and self.tracer.want(r.idx):
+                self.tracer.instant("merge.escalate", r.t_us,
+                                    cat="freshness", req=r.idx,
+                                    kprime=kprime, gen=g.gen)
             out = np.asarray(g.frontend.complete(
                 r.pids[None], np.asarray([r.plen], np.int32), r.suf[None],
                 np.asarray([r.slen], np.int32), k=min(kprime, n_main)))[0]
@@ -263,11 +276,19 @@ class GenerationalQAC:
         rt = self.rt
         if not rt._results:
             return
+        tr = self.tracer
         for idx, row in rt._results.items():
             r = self._req_by_idx.pop(idx)
             g = self.history[rt.done_gen[idx]]
             seq = g.delta.seq
+            traced = tr is not None and tr.want(idx)
+            t0 = time.perf_counter() if traced else 0.0
             strings, scs, n_delta, esc = self._merge(g, r, row, seq)
+            if traced:
+                tr.span("merge.kway", rt.done_t_us[idx],
+                        (time.perf_counter() - t0) * 1e6, cat="freshness",
+                        req=idx, n_delta=n_delta, escalations=esc,
+                        seq=seq, gen=g.gen)
             self.answers[idx] = FreshResult(
                 idx=idx, query=r.query, k=r.k, gen=g.gen, seq=seq,
                 strings=strings, scores=scs, path=rt.done_path[idx],
@@ -293,6 +314,9 @@ class GenerationalQAC:
         self.apply_log.append(dict(
             t_us=float(t_us), outcome=out, gen=g.gen,
             wall_us=(time.perf_counter() - t0) * 1e6))
+        if self.tracer is not None:
+            self.tracer.instant("delta.apply", float(t_us), cat="freshness",
+                                outcome=out, gen=g.gen, seq=g.delta.seq)
         if g.delta.seq >= self.cfg.swap_threshold:
             self._rebuild_and_swap(t_us)
         return out
@@ -345,6 +369,13 @@ class GenerationalQAC:
             t_us=float(t_us), gen=new_gen, rebuild_wall_us=rebuild_us,
             swap_stall_us=stall_us, folded=g.delta.n,
             folded_seq=g.delta.seq, deferred=len(g.delta.deferred)))
+        if self.tracer is not None:
+            self.tracer.span("generation.rebuild", float(t_us), rebuild_us,
+                             cat="freshness", gen=new_gen, folded=g.delta.n)
+            self.tracer.span("generation.swap_stall", float(t_us), stall_us,
+                             cat="freshness", gen=new_gen)
+            self.tracer.instant("generation.swap", float(t_us),
+                                cat="freshness", generation=new_gen)
 
     # -- serving --------------------------------------------------------------
     def _flush_requests(self, buf: list, k: int):
@@ -478,10 +509,13 @@ class GenerationalQAC:
     def snapshot(self) -> dict:
         """Freshness counters + the runtime telemetry snapshot."""
         served = list(self.answers.values())
-        apply_us = np.asarray([a["wall_us"] for a in self.apply_log]
-                              or [0.0])
-        stalls = np.asarray([s["swap_stall_us"] for s in self.swap_log]
-                            or [0.0])
+        # the shared percentile helper; the `or [0.0]` fallback is kept so
+        # a zero-mutation replay still reports floats (this snapshot's
+        # long-standing contract, unlike the runtime/cluster latency keys)
+        ap = percentiles([a["wall_us"] for a in self.apply_log] or [0.0],
+                         (50, 99))
+        st = percentiles([s["swap_stall_us"] for s in self.swap_log]
+                         or [0.0], (99,))
         return {
             "generation": self.rt.generation,
             "n_swaps": len(self.swap_log),
@@ -491,9 +525,9 @@ class GenerationalQAC:
             "delta_stats": self._cur().delta.stats(),
             "delta_hit_answers": sum(1 for r in served if r.n_delta > 0),
             "escalations": sum(r.escalations for r in served),
-            "apply_p50_us": float(np.percentile(apply_us, 50)),
-            "apply_p99_us": float(np.percentile(apply_us, 99)),
-            "swap_stall_p99_us": float(np.percentile(stalls, 99)),
+            "apply_p50_us": ap["p50_us"],
+            "apply_p99_us": ap["p99_us"],
+            "swap_stall_p99_us": st["p99_us"],
             "rebuild_wall_us": [s["rebuild_wall_us"] for s in self.swap_log],
             "runtime": self.rt.telemetry.snapshot(),
         }

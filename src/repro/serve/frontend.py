@@ -70,7 +70,8 @@ class QACFrontend:
                  heap_kernel: bool | None = None,
                  specialize_list_pad: bool = True,
                  postings_codec: str | None = None,
-                 heap_kernel_max_bytes: int | None = None):
+                 heap_kernel_max_bytes: int | None = None,
+                 auditor=None):
         self.qidx = qidx
         self.k = k
         self.tile = tile
@@ -115,6 +116,17 @@ class QACFrontend:
         self._cache = {}
         self.stats = {"requests": 0, "single_queries": 0, "multi_queries": 0,
                       "single_fallbacks": 0}
+        # observability (ISSUE 10): the jit-variant auditor wraps every
+        # newly-minted jit callable so its first invocation (where XLA
+        # compiles) is timed + recorded, and post-freeze compiles are
+        # flagged as closed-variant violations. None = unaudited.
+        self.auditor = auditor
+        # per-dispatch key/route log: a tracer-enabled runtime brackets its
+        # complete() call with begin/end_dispatch_log to learn which jit
+        # variants (and therefore which kernel routes) served the batch.
+        # None = disabled — the per-_get cost is one attribute check.
+        self._dispatch_log = None
+        self._route_desc: dict = {}
 
     def _multi_list_pad(self, pids, plen) -> int:
         """pow2 pad of the longest probe list THIS sub-batch can touch.
@@ -135,8 +147,57 @@ class QACFrontend:
     def _bucket(self, n: int) -> int:
         return max(self.min_bucket, 1 << (n - 1).bit_length())
 
+    def describe_route(self, engine: str, bucket: int = 0,
+                       list_pad: int = 0) -> str:
+        """Which kernel route a dispatch on ``engine`` actually takes, as a
+        static host-side string ("heap_topk[raw]", "intersect[packed]",
+        "xla_probes", ...). Mirrors the routing ladders in
+        ``core.search.single_term_topk_bounded_batch`` (via
+        ``describe_single_route``) and the multi-term ``use_k`` gate in
+        ``_get`` — routing is static per (engine, bucket, list_pad), so
+        the answer is cached."""
+        ck = (engine, bucket, list_pad)
+        desc = self._route_desc.get(ck)
+        if desc is None:
+            if engine in ("single", "single_full"):
+                from ..core.search import describe_single_route
+
+                desc = describe_single_route(
+                    self.qidx.index, self.qidx.rmq_minimal,
+                    use_kernel=self.use_kernel,
+                    heap_kernel=self.heap_kernel,
+                    postings_codec=self.postings_codec,
+                    heap_kernel_max_bytes=self.heap_kernel_max_bytes)
+            elif engine == "multi":
+                # keep in sync with the use_k gate in _get below
+                if self.use_kernel and self._explicit_packed:
+                    desc = "intersect[packed]"
+                elif (self.use_kernel and list_pad <= MAX_LIST_PAD
+                        and bucket * MAX_TERMS * list_pad * 4
+                        <= MAX_MULTI_KERNEL_BYTES):
+                    desc = "intersect[raw]"
+                else:
+                    desc = "xla_probes"
+            else:
+                desc = engine
+            self._route_desc[ck] = desc
+        return desc
+
+    def begin_dispatch_log(self):
+        """Start recording (jit-key, route) per ``_get`` dispatch; the
+        tracer-enabled runtime brackets each ``complete()`` call with
+        begin/end to attribute kernel routes to batch spans."""
+        self._dispatch_log = []
+
+    def end_dispatch_log(self) -> list:
+        log, self._dispatch_log = self._dispatch_log or [], None
+        return log
+
     def _get(self, engine: str, bucket: int, k: int, list_pad: int = 0):
         key = (engine, bucket, k, list_pad)
+        if self._dispatch_log is not None:
+            self._dispatch_log.append(
+                (key, self.describe_route(engine, bucket, list_pad)))
         fn = self._cache.get(key)
         if fn is None:
             if engine == "single":
@@ -173,6 +234,10 @@ class QACFrontend:
                     postings_codec=self.postings_codec))
             else:
                 raise ValueError(engine)
+            if self.auditor is not None:
+                fn = self.auditor.wrap(
+                    key, fn, label=self.describe_route(engine, bucket,
+                                                       list_pad))
             self._cache[key] = fn
         return fn
 

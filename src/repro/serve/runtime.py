@@ -75,6 +75,7 @@ import numpy as np
 
 from ..core.builder import QACIndex, parse_queries
 from ..core.types import INF_DOCID
+from ..obs.metrics import percentiles
 from .frontend import QACFrontend
 
 
@@ -215,25 +216,23 @@ class RuntimeTelemetry:
         entry["session_entries"] += n_sessions
 
     def snapshot(self) -> dict:
-        lat = np.asarray(self.lat_us if self.lat_us else [0.0])
         n = len(self.lat_us)
         hits = self.paths["hit_exact"] + self.paths["hit_session"]
-        bs = np.asarray(self.batch_sizes if self.batch_sizes else [0])
         hist = {}
         if self.batch_sizes:
+            bs = np.asarray(self.batch_sizes)
             sizes, counts = np.unique(bs, return_counts=True)
             hist = {int(s): int(c) for s, c in zip(sizes, counts)}
-        return {
-            "n_requests": n,
-            "p50_us": float(np.percentile(lat, 50)),
-            "p95_us": float(np.percentile(lat, 95)),
-            "p99_us": float(np.percentile(lat, 99)),
-            "mean_us": float(lat.mean()),
-            "max_us": float(lat.max()),
+        snap = {"n_requests": n}
+        # the repo's ONE percentile implementation (obs.metrics): a window
+        # that served nothing reports explicit None, never a fake 0us
+        snap.update(percentiles(self.lat_us, mean=True, vmax=True))
+        snap.update({
             "cache_hit_rate": hits / max(n, 1),
             "paths": dict(self.paths),
             "n_batches": len(self.batch_sizes),
-            "mean_batch_size": float(bs.mean()),
+            "mean_batch_size": (float(np.mean(self.batch_sizes))
+                                if self.batch_sizes else None),
             "batch_hist": hist,
             "triggers": dict(self.triggers),
             "queue_peak": self.queue_peak,
@@ -244,7 +243,8 @@ class RuntimeTelemetry:
                                for g, c in sorted(self.paths_by_gen.items())},
             "invalidations": {f"{o}->{n}": dict(v) for (o, n), v in
                               sorted(self.invalidations.items())},
-        }
+        })
+        return snap
 
 
 class QACOnlineRuntime:
@@ -252,9 +252,19 @@ class QACOnlineRuntime:
     ``QACFrontend``. One instance per serving replica; ``reset()`` clears
     queue/caches/telemetry but keeps the frontend's warm jit cache."""
 
-    def __init__(self, frontend: QACFrontend, cfg: RuntimeConfig | None = None):
+    def __init__(self, frontend: QACFrontend, cfg: RuntimeConfig | None = None,
+                 *, tracer=None, registry=None):
         self.fe = frontend
         self.cfg = cfg if cfg is not None else RuntimeConfig()
+        # observability (ISSUE 10): every instrumentation site below is
+        # behind `if self.tracer is not None` (+ per-request sampling), so
+        # tracer=None costs one attribute check per request. The registry
+        # collector closes over self, so reset()'s fresh telemetry is
+        # picked up without re-registering.
+        self.tracer = tracer
+        if registry is not None:
+            registry.register_collector("runtime",
+                                        lambda: self.telemetry.snapshot())
         # host forward index for the session filter path: docid -> term row
         self.fwd = np.asarray(frontend.qidx.completions.fwd_terms)
         # posting-list lengths (host), for the completeness proof below
@@ -409,6 +419,38 @@ class QACOnlineRuntime:
         self.done_gen[r.idx] = self.generation
         self.telemetry.record(path, lat_us, gen=self.generation)
 
+    # -- tracing helpers ------------------------------------------------------
+    def _trace_hit(self, r: QACRequest, path: str, lat_us: float, **attrs):
+        """Root request span + cache-tier child for a request answered at
+        arrival (trivial / hit_exact / hit_session). No-op unless the
+        request is sampled."""
+        tr = self.tracer
+        if tr is None or not tr.want(r.idx):
+            return
+        root = tr.span("request", r.t_us, lat_us, req=r.idx, path=path,
+                       session=r.session, k=r.k, gen=self.generation,
+                       query=r.query)
+        tr.span(f"cache.{path}", r.t_us, lat_us, cat="cache", req=r.idx,
+                parent=root, **attrs)
+
+    def _miss_reason(self, r: QACRequest, sess) -> str:
+        """Why the session fast path could not serve r (the exact LRU was
+        already probed and absent). Computed only for sampled requests."""
+        if self.cfg.session_entries <= 0:
+            return "session_disabled"
+        if sess is None:
+            return "no_session_entry"
+        if sess.full is None:
+            return "truncated_set"
+        if sess.gen != self.generation:
+            return "stale_generation"
+        if not self._scan_exact(r):
+            return "scan_inexact"
+        new_pids = frozenset(int(t) for t in r.pids[: r.plen])
+        if not sess.pid_set <= new_pids:
+            return "not_subset"
+        return "suffix_widened"
+
     # -- scheduler ------------------------------------------------------------
     def submit(self, r: QACRequest):
         """One arriving request: serve it from the caches at arrival, or
@@ -419,7 +461,9 @@ class QACOnlineRuntime:
         if self._is_bad(r):
             row = np.full(r.k, INF_DOCID, np.int32)
             self._remember(r, row, row[:0])
-            self._finish(r, row, "trivial", (time.perf_counter() - t0) * 1e6)
+            lat = (time.perf_counter() - t0) * 1e6
+            self._finish(r, row, "trivial", lat)
+            self._trace_hit(r, "trivial", lat, reason="engine_reject")
             return
         if self.cfg.cache_entries > 0:
             ck = (self.generation, r.key, r.k)
@@ -427,8 +471,9 @@ class QACOnlineRuntime:
             if hit is not None:
                 self.cache.move_to_end(ck)
                 self._remember(r, hit, None)
-                self._finish(r, hit.copy(), "hit_exact",
-                             (time.perf_counter() - t0) * 1e6)
+                lat = (time.perf_counter() - t0) * 1e6
+                self._finish(r, hit.copy(), "hit_exact", lat)
+                self._trace_hit(r, "hit_exact", lat, reason="lru_exact")
                 return
         sess = (self.sessions.get(r.session)
                 if self.cfg.session_entries > 0 else None)
@@ -438,9 +483,14 @@ class QACOnlineRuntime:
             row = np.full(r.k, INF_DOCID, np.int32)
             row[: min(r.k, keep.size)] = keep[: r.k]
             self._remember(r, row, keep)
-            self._finish(r, row, "hit_session",
-                         (time.perf_counter() - t0) * 1e6)
+            lat = (time.perf_counter() - t0) * 1e6
+            self._finish(r, row, "hit_session", lat)
+            self._trace_hit(r, "hit_session", lat, reason="subset_filter",
+                            n_candidates=int(cand.size))
             return
+        if self.tracer is not None and self.tracer.want(r.idx):
+            self.tracer.instant("cache.miss", now, cat="cache", req=r.idx,
+                                reason=self._miss_reason(r, sess))
         r.deadline = now + self.cfg.slack_us
         self.queue.append(r)
         self.telemetry.queue_peak = max(self.telemetry.queue_peak,
@@ -469,6 +519,10 @@ class QACOnlineRuntime:
         # (deadline = arrival + slack, full-trigger uses now) — a violation
         # would mean serving a request before it arrived
         assert batch, "dispatch scheduled before the queue head's arrival"
+        tr = self.tracer
+        traced = tr is not None and any(tr.want(r.idx) for r in batch)
+        if traced:
+            self.fe.begin_dispatch_log()
         t0 = time.perf_counter()
         pids = np.stack([r.pids for r in batch])
         plen = np.asarray([r.plen for r in batch], np.int32)
@@ -480,6 +534,12 @@ class QACOnlineRuntime:
         out = np.asarray(self.fe.complete(pids, plen, suf, slen, k=ks))
         dt_us = (time.perf_counter() - t0) * 1e6
         self._server_free = t_start + dt_us
+        if traced:
+            dlog = self.fe.end_dispatch_log()
+            tr.span("batch.dispatch", t_start, dt_us, cat="batch",
+                    size=len(batch), trigger=trigger,
+                    jit_keys=[list(key) for key, _ in dlog],
+                    routes=sorted({route for _, route in dlog}))
         tel = self.telemetry
         tel.batch_sizes.append(len(batch))
         tel.triggers[trigger] += 1
@@ -490,7 +550,19 @@ class QACOnlineRuntime:
         for i, r in enumerate(batch):
             row = out[i, : r.k].copy()
             self._remember(r, row, None)
-            self._finish(r, row, "miss", self._server_free - r.t_us)
+            lat = self._server_free - r.t_us
+            self._finish(r, row, "miss", lat)
+            if traced and tr.want(r.idx):
+                # queue.wait + engine.service == lat EXACTLY (same clock
+                # arithmetic) — obs_report rebuilds p99 from this identity
+                root = tr.span("request", r.t_us, lat, req=r.idx,
+                               path="miss", session=r.session, k=r.k,
+                               gen=self.generation, query=r.query)
+                tr.span("queue.wait", r.t_us, t_start - r.t_us,
+                        cat="queue", req=r.idx, parent=root,
+                        trigger=trigger)
+                tr.span("engine.service", t_start, dt_us, cat="engine",
+                        req=r.idx, parent=root, batch_size=len(batch))
 
     def tick(self, now: float):
         """Fire any deadline-expired dispatches up to ``now``. Trace replay
@@ -592,11 +664,6 @@ def run_naive_trace(frontend: QACFrontend, reqs: list[QACRequest],
         server_free = start + dt_us
         lats.append(server_free - r.t_us)
         rows.append(out[0, : r.k].copy())
-    lat = np.asarray(lats if lats else [0.0])
-    stats = {
-        "n_requests": len(lats),
-        "p50_us": float(np.percentile(lat, 50)),
-        "p99_us": float(np.percentile(lat, 99)),
-        "mean_us": float(lat.mean()),
-    }
+    stats = {"n_requests": len(lats)}
+    stats.update(percentiles(lats, (50, 99), mean=True))
     return rows, stats

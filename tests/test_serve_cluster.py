@@ -335,5 +335,6 @@ def test_cluster_percentiles_pinned_to_numpy(built):
     for p in (50, 95, 99):
         assert snap[f"interactive_p{p}_us"] == float(np.percentile(lats, p))
     assert snap["interactive_mean_us"] == pytest.approx(np.mean(lats))
-    assert snap["bulk_p99_us"] == 0.0        # empty class: zero, not NaN
+    assert snap["bulk_p99_us"] is None       # empty class: None, not NaN/0
+    assert snap["bulk_mean_us"] is None
     assert snap["shed_rate"] == 0.0
